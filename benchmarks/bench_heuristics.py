@@ -1,0 +1,60 @@
+"""Paper Fig 16: redistribution-tree heuristics — High-Low (default) vs
+Low-High vs QDegree: replication, IRD communication, data touched, time."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import repro.core  # noqa: F401
+from repro.core.engine import AdHashEngine
+from repro.data.synthetic_rdf import Workload, lubm_like
+
+
+def run(n_workers: int = 8) -> list[tuple[str, float, str]]:
+    # high sharing multiplicity (many students per course chain) is the
+    # regime where core choice matters — the LUBM-10240 setting of Fig 16
+    d, triples = lubm_like(n_universities=6, depts_per_univ=2,
+                           profs_per_dept=3, students_per_prof=10)
+    rows = []
+    # two workload regimes, as in the paper: deep hub-terminated chains
+    # (LUBM-10240-like, where High-Low wins) and shallow subject-anchored
+    # queries (WatDiv-like, where QDegree replicates least — §6.4.3)
+    for regime, names in (("deep", ("q4chain", "q9")),
+                          ("shallow", ("q1", "q7"))):
+        touched = {}
+        for heuristic in ("high_low", "low_high", "qdegree"):
+            wl = Workload(d, seed=9)
+            eng = AdHashEngine(triples, n_workers, adaptive=True,
+                               frequency_threshold=3, heuristic=heuristic)
+            qs = []
+            for name in names:
+                qs += [wl.templates[name].instantiate(wl.rng)
+                       for _ in range(8)]
+            t0 = time.perf_counter()
+            for q in qs:
+                eng.query(q)
+            dt = (time.perf_counter() - t0) * 1e6 / len(qs)
+            touched[heuristic] = eng.report.ird_triples
+            rows.append(
+                (f"fig16/{regime}/{heuristic}_us", dt,
+                 f"replication={eng.replication_ratio():.3f}"
+                 f" ird_triples={eng.report.ird_triples}"
+                 f" comm_cells="
+                 f"{eng.report.comm_cells + eng.report.ird_comm_cells}")
+            )
+        # Paper Fig 16a shows Low-High/QDegree touching significantly more
+        # data than High-Low at LUBM-10240 scale (thousands of groups per
+        # hub).  At CPU-feasible scale the gap shrinks — the per-worker
+        # dedup in the replica index caps multiplicity at W copies — so we
+        # REPORT the three heuristics rather than assert an ordering; see
+        # EXPERIMENTS.md for the scale analysis.
+        rows.append((f"fig16/{regime}/touched_ratio",
+                     touched["low_high"] / max(touched["high_low"], 1),
+                     f"{touched}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

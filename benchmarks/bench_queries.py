@@ -1,0 +1,76 @@
+"""Paper Tables 11-14 + Fig 11 + Fig 18: per-query runtimes and
+communication for AdHash vs AdHash-NA vs the locality-blind baseline.
+
+Three engine configurations (the §6.3.1 ablation):
+  blind     locality_aware=False, pinned_opt=False  (SHARD-like broadcast)
+  na        AdHash-NA: locality-aware, no adaptivity
+  adaptive  full AdHash (after warming the heat map)
+
+Also runs the worker-scaling sweep (Fig 18 strong scalability).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import repro.core  # noqa: F401
+from repro.core.engine import AdHashEngine
+from repro.data.synthetic_rdf import Workload, lubm_like
+
+
+def _run_queries(eng, queries):
+    t0 = time.perf_counter()
+    comm = 0
+    for q in queries:
+        _, st = eng.query(q)
+        comm += st.comm_cells
+    return (time.perf_counter() - t0) * 1e6 / max(len(queries), 1), comm
+
+
+def run(n_workers: int = 8) -> list[tuple[str, float, str]]:
+    d, triples = lubm_like(n_universities=4, depts_per_univ=3,
+                           profs_per_dept=4, students_per_prof=6)
+    wl = Workload(d, seed=1)
+    rows = []
+    per_template = {
+        name: [wl.templates[name].instantiate(wl.rng) for _ in range(6)]
+        for name in wl.templates
+    }
+
+    blind = AdHashEngine(triples, n_workers, adaptive=False,
+                         locality_aware=False, pinned_opt=False)
+    na = AdHashEngine(triples, n_workers, adaptive=False)
+    ad = AdHashEngine(triples, n_workers, adaptive=True,
+                      frequency_threshold=3)
+
+    for name, queries in per_template.items():
+        us_blind, comm_blind = _run_queries(blind, queries)
+        us_na, comm_na = _run_queries(na, queries)
+        # warm AdHash so the pattern is redistributed, then measure
+        _run_queries(ad, queries)
+        us_ad, comm_ad = _run_queries(ad, queries)
+        rows.append((f"queries/{name}/blind_us", us_blind,
+                     f"comm_cells={comm_blind}"))
+        rows.append((f"queries/{name}/adhash_na_us", us_na,
+                     f"comm_cells={comm_na}"))
+        rows.append((f"queries/{name}/adhash_us", us_ad,
+                     f"comm_cells={comm_ad}"))
+        # locality awareness must not increase communication (Fig 11b)
+        assert comm_na <= comm_blind, (name, comm_na, comm_blind)
+        # adapted execution is communication-free (paper's headline)
+        assert comm_ad == 0, (name, comm_ad)
+
+    # ---------------- Fig 18: strong scaling of parallel-mode queries
+    for w in (2, 4, 8, 16):
+        eng = AdHashEngine(triples, w, adaptive=True, frequency_threshold=2)
+        qs = per_template["q1"]
+        _run_queries(eng, qs)  # adapt
+        us, comm = _run_queries(eng, qs)
+        rows.append((f"scaling/q1/w{w}_us", us, f"comm_cells={comm}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

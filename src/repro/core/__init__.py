@@ -1,0 +1,26 @@
+"""AdHash core — the paper's primary contribution, in JAX.
+
+Modules:
+  dictionary     string <-> id encoding (master, §3.1)
+  partition      subject-hash initial partitioning + alternatives (§3.1, Tab. 2)
+  stats          per-predicate global statistics + Chauvenet filter (§3.3, §5.1)
+  query          SPARQL BGP model
+  triples        worker storage module: sorted P/PS/PO indexes (§3.2)
+  relalg         static-shape relational primitives (expand/compact/bucket)
+  relation       fixed-capacity sharded intermediate results
+  dsj            distributed semi-join stages (§4.1) — all_to_all vs all_gather
+  executor       locality-aware distributed execution (Algorithm 1)
+  planner        DP cost-based optimizer (§4.2, §4.3)
+  transform      core-vertex selection + redistribution tree (Alg. 2, §5.1-5.2)
+  heatmap        hierarchical workload heat map (§5.4)
+  pattern_index  pattern index + replica index + LRU eviction (§5.5)
+  ird            incremental redistribution (Algorithm 3, §5.3)
+  engine         master/worker facade tying everything together (§3.4)
+  adaptive       the technique re-instantiated for LM sharding (DESIGN.md §2b)
+
+The RDF data plane uses int64 composite probe keys (p * NID + s|o); we enable
+x64 here.  All LM-side model code pins dtypes explicitly and is unaffected.
+"""
+import jax as _jax
+
+_jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,348 @@
+"""Distributed Semi-Join data plane (paper §4.1, Algorithm 1 internals).
+
+Every stage is a pure, jitted global-view function over arrays with a leading
+worker axis W.  When those arrays are sharded over the mesh ``data`` axis the
+XLA SPMD partitioner lowers:
+
+  * the (W_sender, W_receiver) block transpose in ``exchange_hash`` /
+    ``reply_route`` to an **all_to_all** (the paper's hash distribution /
+    point-to-point candidate shipping),
+  * the sender-axis broadcast in ``exchange_broadcast`` to an **all_gather**
+    (the paper's projection-column broadcast).
+
+The choice between the two is exactly Observation 1 and is made by the
+locality-aware planner.  Each stage also returns the number of int32 cells it
+put on the wire, which the engine aggregates into the per-query communication
+accounting used by the paper's experiments (Figs. 11b, 13b, 14b).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .query import O, P, S, TriplePattern, Var
+from .relalg import bucket_by_dest, expand, unique_compact
+from .relation import Relation
+from .triples import ShardedTripleStore, gather_rows, match_ranges, probe_values
+
+__all__ = [
+    "PatternSpec",
+    "jnp_hash_ids",
+    "match_first",
+    "project_unique",
+    "exchange_hash",
+    "exchange_broadcast",
+    "probe_and_reply",
+    "finalize_join",
+    "local_probe_join",
+]
+
+I32MAX = jnp.iinfo(jnp.int32).max
+
+
+def jnp_hash_ids(x: jax.Array) -> jax.Array:
+    """splitmix64 finalizer — bit-identical to ``partition.hash_ids``."""
+    x = x.astype(jnp.uint64)
+    x = x + jnp.uint64(0x9E3779B97F4A7C15)
+    x = x ^ (x >> jnp.uint64(30))
+    x = x * jnp.uint64(0xBF58476D1CE4E5B9)
+    x = x ^ (x >> jnp.uint64(27))
+    x = x * jnp.uint64(0x94D049BB133111EB)
+    x = x ^ (x >> jnp.uint64(31))
+    return (x >> jnp.uint64(1)).astype(jnp.int64)
+
+
+# ---------------------------------------------------------------------------
+# Host-static description of a triple pattern (structure only, no id values).
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class PatternSpec:
+    s_const: bool
+    p_const: bool
+    o_const: bool
+    same_var_so: bool  # pattern like (?x, p, ?x)
+    var_cols: tuple[int, ...]  # columns (S/P/O) carrying the pattern's vars
+
+    @classmethod
+    def of(cls, q: TriplePattern) -> "PatternSpec":
+        return cls(
+            s_const=not isinstance(q.s, Var),
+            p_const=not isinstance(q.p, Var),
+            o_const=not isinstance(q.o, Var),
+            same_var_so=isinstance(q.s, Var) and q.s == q.o,
+            var_cols=tuple(c for _, c in q.var_cols()),
+        )
+
+
+def pattern_consts(q: TriplePattern) -> jnp.ndarray:
+    """(3,) int32: constant id per column, -1 where variable."""
+    vals = [t.id if not isinstance(t, Var) else -1 for t in (q.s, q.p, q.o)]
+    return jnp.asarray(vals, dtype=jnp.int32)
+
+
+def _residual_mask(rows: jax.Array, valid: jax.Array, spec: PatternSpec,
+                   consts: jax.Array, probed: tuple[int, ...]) -> jax.Array:
+    """Enforce pattern constants not already enforced by the index probe,
+    plus same-variable (?x p ?x) equality."""
+    for c, is_c in ((S, spec.s_const), (P, spec.p_const), (O, spec.o_const)):
+        if is_c and c not in probed:
+            valid = valid & (rows[..., c] == consts[c])
+    if spec.same_var_so:
+        valid = valid & (rows[..., S] == rows[..., O])
+    return valid
+
+
+# ---------------------------------------------------------------- first match
+@partial(jax.jit, static_argnames=("spec", "cap_out"))
+def match_rows(
+    store: ShardedTripleStore,
+    consts: jax.Array,  # (3,) int32, -1 = variable
+    spec: PatternSpec,
+    cap_out: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Local pattern match returning full triple rows (used by IRD).
+
+    Returns (rows (W, cap_out, 3), valid, max_total)."""
+    if spec.p_const and spec.s_const:
+        use_po, probed = False, (P, S)
+        lo, hi = match_ranges(store, consts[P], consts[S], use_po=False,
+                              nid=store.n_ids)
+    elif spec.p_const and spec.o_const:
+        use_po, probed = True, (P, O)
+        lo, hi = match_ranges(store, consts[P], consts[O], use_po=True,
+                              nid=store.n_ids)
+    elif spec.p_const:
+        use_po, probed = False, (P,)
+        lo, hi = match_ranges(store, consts[P], jnp.int32(-1), use_po=False,
+                              nid=store.n_ids)
+    else:
+        use_po, probed = False, ()
+        lo, hi = match_ranges(store, jnp.int32(-1), jnp.int32(-1), use_po=False,
+                              nid=store.n_ids)
+    rows, _, valid, totals = gather_rows(
+        store, lo[:, None], hi[:, None], cap_out, use_po=use_po
+    )
+    valid = _residual_mask(rows, valid, spec, consts, probed)
+    return rows, valid, jnp.max(totals)
+
+
+@partial(jax.jit, static_argnames=("spec", "cap_out"))
+def match_first(
+    store: ShardedTripleStore,
+    consts: jax.Array,  # (3,) int32, -1 = variable
+    spec: PatternSpec,
+    cap_out: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """answerSubquery(q) on local shards (Algorithm 1 line 10).
+
+    Returns (cols (W, cap_out, k), valid (W, cap_out), max_total (scalar)).
+    Index selection mirrors §3.2: (p,s)->PS, (p,o)->PO, (p)->P, else scan.
+    """
+    rows, valid, max_total = match_rows(store, consts, spec, cap_out)
+    cols = rows[..., list(spec.var_cols)] if spec.var_cols else rows[..., :0]
+    cols = jnp.where(valid[..., None], cols, -1)
+    return cols, valid, max_total
+
+
+# ----------------------------------------------------------------- projection
+@partial(jax.jit, static_argnames=("col_idx", "cap_proj"))
+def project_unique(
+    cols: jax.Array, valid: jax.Array, col_idx: int, cap_proj: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """pi_c(RS) with per-worker dedup (the paper ships projected columns).
+
+    Returns (proj (W, cap_proj), proj_valid, max_unique (overflow check))."""
+
+    def per_worker(c_w, v_w):
+        u, uv, n = unique_compact(c_w[:, col_idx], v_w, cap_proj, I32MAX)
+        return jnp.where(uv, u, -1), uv, n
+
+    proj, pvalid, n = jax.vmap(per_worker)(cols, valid)
+    return proj, pvalid, jnp.max(n)
+
+
+# ------------------------------------------------------------------ exchanges
+@partial(jax.jit, static_argnames=("cap_peer",))
+def exchange_hash(
+    proj: jax.Array,  # (W, cap_proj)
+    proj_valid: jax.Array,
+    cap_peer: int,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Observation 1 fast path: hash-distribute the projected join column.
+
+    Under subject-hash partitioning the owner of subject v is H(v) mod W, so
+    each value goes to exactly one worker.  The (sender, receiver) transpose
+    lowers to all_to_all under sharding.  Returns (recv (W_recv, W_send,
+    cap_peer), recv_valid, cells_sent, max_bucket)."""
+    w = proj.shape[0]
+
+    def per_worker(p_w, v_w):
+        dest = (jnp_hash_ids(p_w) % w).astype(jnp.int32)
+        send, svalid, max_wanted = bucket_by_dest(
+            p_w[:, None], dest, v_w, w, cap_peer
+        )
+        return send[..., 0], svalid, max_wanted
+
+    send, svalid, maxw = jax.vmap(per_worker)(proj, proj_valid)
+    # (W_sender, W_receiver, cap) -> (W_receiver, W_sender, cap): all_to_all
+    recv = jnp.swapaxes(send, 0, 1)
+    recv_valid = jnp.swapaxes(svalid, 0, 1)
+    # off-diagonal traffic only (w -> w stays local)
+    diag = jnp.sum(svalid[jnp.arange(w), jnp.arange(w)])
+    cells = jnp.sum(svalid) - diag
+    return recv, recv_valid, cells.astype(jnp.int64), jnp.max(maxw)
+
+
+@jax.jit
+def exchange_broadcast(
+    proj: jax.Array, proj_valid: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Observation 1 slow path: every worker receives every projection.
+
+    The sender-axis broadcast lowers to all_gather under sharding.
+    Returns (recv (W_recv, W_send, cap_proj), recv_valid, cells_sent)."""
+    w = proj.shape[0]
+    recv = jnp.broadcast_to(proj[None], (w,) + proj.shape)
+    recv_valid = jnp.broadcast_to(proj_valid[None], (w,) + proj_valid.shape)
+    cells = jnp.sum(proj_valid) * (w - 1)  # each value shipped to W-1 peers
+    return recv, recv_valid, cells.astype(jnp.int64)
+
+
+# -------------------------------------------------------------- probe + reply
+@partial(jax.jit, static_argnames=("spec", "probe_col", "cap_flat", "cap_cand"))
+def probe_and_reply(
+    store: ShardedTripleStore,
+    recv: jax.Array,  # (W, W_send, cap_peer) received join-column values
+    recv_valid: jax.Array,
+    consts: jax.Array,  # (3,) pattern constants
+    spec: PatternSpec,
+    probe_col: int,  # S, P or O — the column the values bind (c2)
+    cap_flat: int,  # probe expansion capacity (this worker, all senders)
+    cap_cand: int,  # per-(replier, sender) candidate capacity
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Each worker semi-joins the received values against its local index and
+    routes candidate triples back to their senders (Algorithm 1 lines 13-23).
+
+    Returns (cand (W_sender, W_replier, cap_cand, 3), cand_valid, cells_sent,
+    max_flat, max_bucket) — cand is already routed back (transposed)."""
+    w, n_send, cap_peer = recv.shape
+    flat_vals = recv.reshape(w, n_send * cap_peer)
+    flat_valid = recv_valid.reshape(w, n_send * cap_peer)
+    lo, hi = probe_values(
+        store, consts[P], flat_vals, flat_valid, col=probe_col, nid=store.n_ids
+    )
+    rows, src, valid, totals = gather_rows(
+        store, lo, hi, cap_flat, use_po=(probe_col == O)
+    )
+    valid = _residual_mask(rows, valid, spec, consts, probed=(P, probe_col))
+    sender = src // cap_peer  # which sender's value produced this row
+
+    def per_worker(rows_w, sender_w, valid_w):
+        return bucket_by_dest(rows_w, sender_w, valid_w, n_send, cap_cand)
+
+    send, svalid, maxb = jax.vmap(per_worker)(rows, sender, valid)
+    # (W_replier, W_sender, cap, 3) -> (W_sender, W_replier, cap, 3)
+    cand = jnp.swapaxes(send, 0, 1)
+    cand_valid = jnp.swapaxes(svalid, 0, 1)
+    diag = jnp.sum(svalid[jnp.arange(w), jnp.arange(w)])
+    cells = (jnp.sum(svalid) - diag) * 3
+    return cand, cand_valid, cells.astype(jnp.int64), jnp.max(totals), jnp.max(maxb)
+
+
+# ------------------------------------------------------------------- finalize
+@partial(jax.jit, static_argnames=("join_col_rel", "probe_col",
+                                   "shared_checks", "append_cols", "cap_out"))
+def finalize_join(
+    rel_cols: jax.Array,  # (W, capR, k) current intermediate RS1
+    rel_valid: jax.Array,
+    cand: jax.Array,  # (W, R, cap_cand, 3) candidate triples (routed back)
+    cand_valid: jax.Array,
+    join_col_rel: int,  # column of RS1 carrying the join variable (c1)
+    probe_col: int,  # column of the candidate triple carrying c2
+    # (rel_col, triple_col) equality checks for additional shared variables
+    shared_checks: tuple[tuple[int, int], ...],
+    append_cols: tuple[int, ...],  # triple columns to append (new variables)
+    cap_out: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """RS1 |><| candidates on RS1.c1 = cand.c2 (local hash join, line 27).
+
+    New columns appended for the pattern's variables *not* already bound.
+    Returns (out_cols (W, cap_out, k + new), out_valid, max_total)."""
+    w, r, cc, _ = cand.shape
+    flat_cand = cand.reshape(w, r * cc, 3)
+    flat_cvalid = cand_valid.reshape(w, r * cc)
+
+    def per_worker(rcols, rvalid, cnd, cvalid):
+        key = jnp.where(cvalid, cnd[:, probe_col], I32MAX)
+        order = jnp.argsort(key)
+        skey = key[order]
+        scand = cnd[order]
+        probe = jnp.where(rvalid, rcols[:, join_col_rel], I32MAX)
+        lo = jnp.searchsorted(skey, probe, side="left").astype(jnp.int32)
+        hi = jnp.searchsorted(skey, probe + 1, side="left").astype(jnp.int32)
+        hi = jnp.where(rvalid & (probe != I32MAX), hi, lo)
+        left, pos, valid, total = expand(lo, hi, cap_out)
+        ltuple = rcols[left]
+        rtriple = scand[jnp.minimum(pos, scand.shape[0] - 1)]
+        for rc, tc in shared_checks:
+            valid = valid & (ltuple[:, rc] == rtriple[:, tc])
+        new_cols = [rtriple[:, c] for c in append_cols]
+        out = (
+            jnp.concatenate([ltuple] + [c[:, None] for c in new_cols], axis=1)
+            if new_cols
+            else ltuple
+        )
+        out = jnp.where(valid[:, None], out, -1)
+        return out, valid, total
+
+    out_cols, out_valid, totals = jax.vmap(per_worker)(
+        rel_cols, rel_valid, flat_cand, flat_cvalid
+    )
+    return out_cols, out_valid, jnp.max(totals)
+
+
+# ----------------------------------------------------- case (i): no-comm join
+@partial(jax.jit, static_argnames=("spec", "join_col_rel", "probe_col",
+                                   "shared_checks", "append_cols", "cap_out"))
+def local_probe_join(
+    store: ShardedTripleStore,
+    rel_cols: jax.Array,  # (W, capR, k)
+    rel_valid: jax.Array,
+    consts: jax.Array,
+    spec: PatternSpec,
+    join_col_rel: int,
+    probe_col: int,  # S in case (i); any col for replica-index local joins
+    shared_checks: tuple[tuple[int, int], ...],
+    append_cols: tuple[int, ...],
+    cap_out: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """JoinWithoutCommunication (Algorithm 1 line 7): c2 = pinned subject, so
+    every matching triple is already local.  Probe own index directly."""
+    vals = rel_cols[:, :, join_col_rel]
+    lo, hi = probe_values(
+        store, consts[P], vals, rel_valid, col=probe_col, nid=store.n_ids
+    )
+    rows, src, valid, totals = gather_rows(
+        store, lo, hi, cap_out, use_po=(probe_col == O)
+    )
+    valid = _residual_mask(rows, valid, spec, consts, probed=(P, probe_col))
+
+    def per_worker(rcols, rows_w, src_w, valid_w):
+        ltuple = rcols[src_w]
+        v = valid_w
+        for rc, tc in shared_checks:
+            v = v & (ltuple[:, rc] == rows_w[:, tc])
+        new_cols = [rows_w[:, c] for c in append_cols]
+        out = (
+            jnp.concatenate([ltuple] + [c[:, None] for c in new_cols], axis=1)
+            if new_cols
+            else ltuple
+        )
+        out = jnp.where(v[:, None], out, -1)
+        return out, v
+
+    out_cols, out_valid = jax.vmap(per_worker)(rel_cols, rows, src, valid)
+    return out_cols, out_valid, jnp.max(totals)

@@ -1,0 +1,222 @@
+"""AdHash engine facade (paper §3, system overview §3.4).
+
+Bootstraps exactly like the paper: encode -> subject-hash partition -> load
+worker shards -> collect statistics -> start answering queries.  Per query:
+
+  1. transform Q into its redistribution tree Q' (Algorithm 2),
+  2. if Q' is contained in the Pattern Index -> parallel mode over the
+     replica index (zero communication),
+  3. else if Q is a subject-star -> parallel mode over the main index,
+  4. else -> locality-aware DP plan + distributed execution (Algorithm 1),
+  5. adaptivity: update the heat map, detect hot patterns, trigger IRD,
+     enforce the replication budget via LRU eviction.
+
+``adaptive=False`` yields the paper's AdHash-NA baseline.  The ablation
+flags (§6.3.1) pass through to the distributed executor.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .dictionary import Dictionary
+from .executor import Executor, QueryStats
+from .heatmap import HeatMap
+from .ird import IncrementalRedistributor, IRDStats
+from .partition import partition_by_subject
+from .pattern_index import ParallelExecutor, PatternIndex, ReplicaIndex
+from .planner import LocalityAwarePlanner, Plan
+from .query import Query, TriplePattern, Var
+from .relation import Relation
+from .stats import GlobalStats, compute_stats
+from .transform import build_redistribution_tree
+from .triples import ShardedTripleStore, match_ranges
+
+__all__ = ["AdHashEngine", "EngineReport"]
+
+
+@dataclass
+class EngineReport:
+    """Cumulative workload accounting (paper Figs. 13/14)."""
+
+    n_queries: int = 0
+    n_parallel: int = 0
+    n_parallel_replica: int = 0
+    n_distributed: int = 0
+    comm_cells: int = 0
+    ird_comm_cells: int = 0
+    ird_triples: int = 0
+    n_redistributions: int = 0
+    n_evictions: int = 0
+    wall_time_s: float = 0.0
+    history: list[tuple[str, int, float]] = field(default_factory=list)
+
+    @property
+    def comm_bytes(self) -> int:
+        return (self.comm_cells + self.ird_comm_cells) * 4
+
+
+class AdHashEngine:
+    def __init__(
+        self,
+        triples: np.ndarray,
+        n_workers: int,
+        *,
+        dictionary: Dictionary | None = None,
+        adaptive: bool = True,
+        frequency_threshold: int = 10,
+        replication_budget: int | None = None,  # max replica triples / worker
+        heuristic: str = "high_low",
+        locality_aware: bool = True,
+        pinned_opt: bool = True,
+        capacity: int = 1 << 12,
+        use_count_oracle: bool = True,
+    ):
+        t0 = time.perf_counter()
+        triples = np.asarray(triples)
+        self.w = n_workers
+        self.dictionary = dictionary
+        self.adaptive = adaptive
+        self.threshold = frequency_threshold
+        self.budget = replication_budget
+        self.heuristic = heuristic
+        self.capacity = capacity
+
+        # --- bootstrap (paper §3.4): partition, load, collect statistics
+        self.n_ids = int(triples.max()) + 1 if triples.size else 1
+        assign = partition_by_subject(triples, n_workers)
+        self.store = ShardedTripleStore.build(
+            triples, assign, n_workers, self.n_ids
+        )
+        self.stats: GlobalStats = compute_stats(triples, self.n_ids)
+
+        oracle = self._count_pattern if use_count_oracle else None
+        self.planner = LocalityAwarePlanner(self.stats, n_workers, oracle)
+        self.executor = Executor(
+            self.store, n_workers, locality_aware, pinned_opt
+        )
+        self.heatmap = HeatMap()
+        self.pattern_index = PatternIndex()
+        self.replicas = ReplicaIndex(n_workers)
+        self.parallel_exec = ParallelExecutor(
+            self.store, self.replicas, n_workers
+        )
+        self.ird = IncrementalRedistributor(
+            self.store, self.replicas, n_workers, capacity
+        )
+        self._no_redistribute: set = set()
+        self.report = EngineReport()
+        self.startup_time_s = time.perf_counter() - t0
+
+    # ------------------------------------------------------------ cardinality
+    def _count_pattern(self, q: TriplePattern) -> int:
+        """Exact pattern count via a cheap index probe (planner oracle)."""
+        import jax.numpy as jnp
+
+        from . import dsj
+
+        spec = dsj.PatternSpec.of(q)
+        consts = dsj.pattern_consts(q)
+        if spec.p_const and spec.s_const:
+            lo, hi = match_ranges(self.store, consts[1], consts[0],
+                                  use_po=False, nid=self.n_ids)
+        elif spec.p_const and spec.o_const:
+            lo, hi = match_ranges(self.store, consts[1], consts[2],
+                                  use_po=True, nid=self.n_ids)
+        elif spec.p_const:
+            lo, hi = match_ranges(self.store, consts[1], jnp.int32(-1),
+                                  use_po=False, nid=self.n_ids)
+        else:
+            lo, hi = match_ranges(self.store, jnp.int32(-1), jnp.int32(-1),
+                                  use_po=False, nid=self.n_ids)
+        return int(jnp.sum(hi - lo))
+
+    # ------------------------------------------------------------------ query
+    def query(self, q: Query) -> tuple[Relation, QueryStats]:
+        t0 = time.perf_counter()
+        tree = build_redistribution_tree(q, self.stats, self.heuristic)
+
+        # (2) pattern-index hit -> parallel mode over replicas
+        matches = self.pattern_index.match(tree) if self.adaptive else None
+        if matches is not None:
+            rel, qstats = self.parallel_exec.execute(
+                tree, matches, self.capacity
+            )
+            self.report.n_parallel_replica += 1
+        else:
+            plan = self.planner.plan(q)
+            rel, qstats = self.executor.execute(
+                q, plan.ordering, plan.join_vars,
+                capacity=max(self.capacity, plan.capacity_hint()),
+            )
+            if qstats.mode == "parallel":
+                self.report.n_parallel += 1
+            else:
+                self.report.n_distributed += 1
+
+        # (5) adaptivity: monitor + IRD
+        if self.adaptive:
+            self.heatmap.insert(tree)
+            self._maybe_redistribute()
+
+        dt = time.perf_counter() - t0
+        self.report.n_queries += 1
+        self.report.comm_cells += qstats.comm_cells
+        self.report.wall_time_s += dt
+        self.report.history.append((qstats.mode, qstats.comm_cells, dt))
+        return rel, qstats
+
+    # ------------------------------------------------------------- adaptivity
+    def _maybe_redistribute(self) -> None:
+        for hot in self.heatmap.hot_patterns(self.threshold):
+            key = tuple(sorted(map(tuple, hot.edge_paths)))
+            if key in self._no_redistribute:
+                continue
+            if self.pattern_index.match(hot.rtree) is not None:
+                continue  # already redistributed
+            storage, ird_stats = self.ird.redistribute(hot)
+            self.pattern_index.insert(hot.rtree, storage)
+            self.report.n_redistributions += 1
+            self.report.ird_comm_cells += ird_stats.comm_cells
+            self.report.ird_triples += ird_stats.triples_indexed
+            self._enforce_budget()
+            # pattern too large for the budget even alone: do not thrash
+            if (
+                self.budget is not None
+                and self.pattern_index.match(hot.rtree) is None
+            ):
+                self._no_redistribute.add(key)
+
+    def _enforce_budget(self) -> None:
+        if self.budget is None:
+            return
+        guard = 0
+        while self.replicas.max_per_worker() > self.budget and guard < 64:
+            sids = self.pattern_index.evict_lru_root()
+            if sids is None:  # nothing evictable remains
+                break
+            for sid in sids:
+                self.replicas.drop(sid)
+            self.report.n_evictions += 1
+            guard += 1
+
+    # ------------------------------------------------------------- inspection
+    def replication_ratio(self) -> float:
+        """Replicated triples as a fraction of the original data."""
+        total = int(np.asarray(self.store.counts).sum())
+        rep = int(self.replicas.per_worker_triples().sum())
+        return rep / max(total, 1)
+
+    def load_balance(self) -> dict:
+        main = np.asarray(self.store.counts, dtype=np.int64)
+        rep = self.replicas.per_worker_triples()
+        tot = main + rep
+        return {
+            "max": int(tot.max()),
+            "min": int(tot.min()),
+            "mean": float(tot.mean()),
+            "std": float(tot.std()),
+            "replication_ratio": self.replication_ratio(),
+        }

@@ -1,0 +1,245 @@
+"""Locality-Aware Distributed Execution (paper Algorithm 1).
+
+Host-side orchestration of the jitted DSJ stages in dsj.py.  For each join
+step the executor picks the paper's four cases (§4.1.3):
+
+  (i)   c2 = subject  and c2 = pinned_subject  -> local join, zero comm
+  (ii)  c2 = subject  and c2 != pinned_subject -> DSJ, hash-distributed column
+  (iii) c2 != subject                          -> DSJ, broadcast column
+  (iv)  multiple join columns -> join on subject if possible (as (ii)),
+        verify remaining columns during finalization
+
+Capacities are sized from the planner's cardinality estimates and doubled on
+overflow (the static-shape discipline; see DESIGN.md §4).  Every stage's wire
+cells are accumulated into QueryStats — the paper's communication metric.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+
+from . import dsj
+from .query import O, P, S, Query, TriplePattern, Var
+from .relation import Relation
+from .triples import ShardedTripleStore
+
+__all__ = ["QueryStats", "Executor", "ExecutorError"]
+
+_MAX_RETRIES = 7
+
+
+class ExecutorError(RuntimeError):
+    pass
+
+
+@dataclass
+class QueryStats:
+    mode: str = "distributed"  # or "parallel" / "parallel-replica"
+    comm_cells: int = 0  # int32 cells on the wire
+    n_dsj: int = 0
+    n_local_joins: int = 0
+    n_retries: int = 0
+    plan: list[str] = field(default_factory=list)
+
+    @property
+    def comm_bytes(self) -> int:
+        return self.comm_cells * 4
+
+
+def _shared_checks(
+    rel_vars: tuple[Var, ...], q: TriplePattern, join_var: Var
+) -> tuple[tuple[int, int], ...]:
+    """(rel_col, triple_col) equality checks for extra shared vars (case iv)."""
+    checks = []
+    for v, c in q.var_cols():
+        if v != join_var and v in rel_vars:
+            checks.append((rel_vars.index(v), c))
+    return tuple(checks)
+
+
+def _append_plan(rel_vars: tuple[Var, ...], q: TriplePattern
+                 ) -> tuple[tuple[int, ...], tuple[Var, ...]]:
+    """Triple columns to append (vars not yet bound) + resulting var tuple."""
+    append: list[int] = []
+    out = list(rel_vars)
+    for v, c in q.var_cols():
+        if v not in out:
+            append.append(c)
+            out.append(v)
+    return tuple(append), tuple(out)
+
+
+class Executor:
+    """Evaluates one ordered query against a ShardedTripleStore.
+
+    The two ablation flags reproduce the configurations of paper §6.3.1:
+      locality_aware=False  -> projected columns are always broadcast
+                               (disables Observation 1 hash distribution)
+      pinned_opt=False      -> joins on the pinned subject still run as
+                               synchronized DSJs (disables Observation 2)
+    """
+
+    def __init__(
+        self,
+        store: ShardedTripleStore,
+        n_workers: int,
+        locality_aware: bool = True,
+        pinned_opt: bool = True,
+    ):
+        self.store = store
+        self.w = n_workers
+        self.locality_aware = locality_aware
+        self.pinned_opt = pinned_opt
+
+    # ------------------------------------------------------------ first match
+    def _match_first(self, q: TriplePattern, cap: int, stats: QueryStats
+                     ) -> Relation:
+        spec = dsj.PatternSpec.of(q)
+        consts = dsj.pattern_consts(q)
+        for _ in range(_MAX_RETRIES):
+            cols, valid, total = dsj.match_first(self.store, consts, spec, cap)
+            if int(total) <= cap:
+                # keep one column per distinct variable (handles ?x p ?x)
+                vc = q.var_cols()
+                keep: list[int] = []
+                seen: set[Var] = set()
+                for i, (v, _) in enumerate(vc):
+                    if v not in seen:
+                        seen.add(v)
+                        keep.append(i)
+                vars_ = tuple(vc[i][0] for i in keep)
+                if len(keep) != len(vc):
+                    cols = cols[..., keep]
+                return Relation(cols, valid, vars_)
+            cap = max(cap * 2, int(total))
+            stats.n_retries += 1
+        raise ExecutorError("match_first exceeded retry budget")
+
+    # ------------------------------------------------------------- join steps
+    def _join_step(
+        self,
+        rel: Relation,
+        q: TriplePattern,
+        join_var: Var,
+        pinned: Var | None,
+        cap: int,
+        stats: QueryStats,
+    ) -> Relation:
+        spec = dsj.PatternSpec.of(q)
+        consts = dsj.pattern_consts(q)
+        c1 = rel.col_of(join_var)
+        c2 = q.col_of(join_var)  # subject preferred by col_of
+        checks = _shared_checks(rel.vars, q, join_var)
+        append_cols, out_vars = _append_plan(rel.vars, q)
+
+        # ---------------------------------------------------------- case (i)
+        if (
+            c2 == S
+            and pinned is not None
+            and join_var == pinned
+            and self.pinned_opt
+            and self.locality_aware
+        ):
+            stats.n_local_joins += 1
+            stats.plan.append(f"local-join on {join_var}")
+            for _ in range(_MAX_RETRIES):
+                cols, valid, total = dsj.local_probe_join(
+                    self.store, rel.cols, rel.valid, consts, spec,
+                    c1, c2, checks, append_cols, cap,
+                )
+                if int(total) <= cap:
+                    return Relation(cols, valid, out_vars)
+                cap = max(cap * 2, int(total))
+                stats.n_retries += 1
+            raise ExecutorError("local join exceeded retry budget")
+
+        # --------------------------------------------------- cases (ii)/(iii)
+        stats.n_dsj += 1
+        hash_mode = (c2 == S) and self.locality_aware
+        stats.plan.append(
+            f"dsj[{'hash' if hash_mode else 'bcast'}] on {join_var}"
+        )
+        cap_proj = max(cap, 64)
+        for _ in range(_MAX_RETRIES):
+            proj, pvalid, nuniq = dsj.project_unique(
+                rel.cols, rel.valid, c1, cap_proj
+            )
+            if int(nuniq) <= cap_proj:
+                break
+            cap_proj = max(cap_proj * 2, int(nuniq))
+            stats.n_retries += 1
+        else:
+            raise ExecutorError("projection exceeded retry budget")
+
+        if hash_mode:
+            cap_peer = cap_proj
+            for _ in range(_MAX_RETRIES):
+                recv, rvalid, cells, maxb = dsj.exchange_hash(
+                    proj, pvalid, cap_peer
+                )
+                if int(maxb) <= cap_peer:
+                    break
+                cap_peer = max(cap_peer * 2, int(maxb))
+                stats.n_retries += 1
+            else:
+                raise ExecutorError("hash exchange exceeded retry budget")
+            stats.comm_cells += int(cells)
+        else:
+            recv, rvalid, cells = dsj.exchange_broadcast(proj, pvalid)
+            stats.comm_cells += int(cells)
+
+        cap_flat, cap_cand = max(cap, 64), max(cap, 64)
+        for _ in range(_MAX_RETRIES):
+            cand, cvalid, cells, maxf, maxc = dsj.probe_and_reply(
+                self.store, recv, rvalid, consts, spec, c2, cap_flat, cap_cand
+            )
+            if int(maxf) <= cap_flat and int(maxc) <= cap_cand:
+                break
+            if int(maxf) > cap_flat:
+                cap_flat = max(cap_flat * 2, int(maxf))
+            if int(maxc) > cap_cand:
+                cap_cand = max(cap_cand * 2, int(maxc))
+            stats.n_retries += 1
+        else:
+            raise ExecutorError("probe/reply exceeded retry budget")
+        stats.comm_cells += int(cells)
+
+        for _ in range(_MAX_RETRIES):
+            cols, valid, total = dsj.finalize_join(
+                rel.cols, rel.valid, cand, cvalid, c1, c2, checks,
+                append_cols, cap,
+            )
+            if int(total) <= cap:
+                return Relation(cols, valid, out_vars)
+            cap = max(cap * 2, int(total))
+            stats.n_retries += 1
+        raise ExecutorError("finalize exceeded retry budget")
+
+    # -------------------------------------------------------------- top level
+    def execute(
+        self,
+        query: Query,
+        ordering: list[int],
+        join_vars: list[Var],
+        capacity: int | None = None,
+    ) -> tuple[Relation, QueryStats]:
+        """Algorithm 1: evaluate ``query`` under a planner-chosen ordering.
+
+        ``join_vars[i]`` is the join variable for step i (joining pattern
+        ordering[i+1] into the running intermediate result).
+        """
+        stats = QueryStats()
+        cap = capacity or query.capacity
+        q1 = query.patterns[ordering[0]]
+        rel = self._match_first(q1, cap, stats)
+        pinned = q1.s if isinstance(q1.s, Var) else None
+        stats.plan.append(f"match {q1} (pinned={pinned})")
+
+        for step, idx in enumerate(ordering[1:]):
+            qj = query.patterns[idx]
+            rel = self._join_step(rel, qj, join_vars[step], pinned, cap, stats)
+
+        if stats.n_dsj == 0:
+            stats.mode = "parallel"
+        return rel, stats

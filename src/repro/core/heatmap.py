@@ -1,0 +1,184 @@
+"""Hierarchical workload heat map (paper §5.4).
+
+Queries are transformed into redistribution trees (Algorithm 2), then into
+*templates* — constants are replaced by variables, with the constant values
+and their frequencies retained as vertex metadata.  Templates are merged into
+a prefix-tree-like structure whose edges carry access counts; subtrees whose
+edges all reach the frequency threshold are *hot patterns*.
+
+Dominant constants are re-substituted into hot patterns using the Boyer-Moore
+majority-vote algorithm (paper §5.4), verified against the exact counts kept
+in the metadata (MJRTY needs a verification pass).
+"""
+from __future__ import annotations
+
+import itertools
+from collections import Counter
+from dataclasses import dataclass, field
+
+from .query import Const, Query, Term, TriplePattern, Var
+from .transform import RTree, TreeEdge, TreeNode
+
+__all__ = ["BoyerMoore", "EdgeKey", "HeatEdge", "HeatMap", "HotPattern"]
+
+
+class BoyerMoore:
+    """MJRTY streaming majority candidate + exact verification counter."""
+
+    def __init__(self) -> None:
+        self.candidate: int | None = None
+        self.count = 0
+        self.freq: Counter[int] = Counter()  # vertex metadata {const: freq}
+        self.total = 0
+
+    def update(self, value: int) -> None:
+        self.freq[value] += 1
+        self.total += 1
+        if self.count == 0:
+            self.candidate, self.count = value, 1
+        elif value == self.candidate:
+            self.count += 1
+        else:
+            self.count -= 1
+
+    def majority(self) -> int | None:
+        """The dominant constant, if one truly dominates (> half)."""
+        if self.candidate is None:
+            return None
+        if self.freq[self.candidate] * 2 > self.total:
+            return self.candidate
+        return None
+
+
+# Edge identity in the template: (predicate, orientation).
+# pred is the constant id, or -1 for an unbounded (variable) predicate.
+@dataclass(frozen=True)
+class EdgeKey:
+    pred: int
+    parent_is_subject: bool
+
+
+@dataclass
+class HeatEdge:
+    key: EdgeKey
+    count: int = 0
+    last_ts: int = 0
+    child_meta: BoyerMoore = field(default_factory=BoyerMoore)
+    child_var_seen: int = 0  # times the child vertex was a variable
+    children: dict[EdgeKey, "HeatEdge"] = field(default_factory=dict)
+
+    def n_edges(self) -> int:
+        return 1 + sum(c.n_edges() for c in self.children.values())
+
+
+@dataclass
+class HotPattern:
+    """A hot subtree extracted from the heat map, ready for IRD."""
+
+    query: Query  # reconstructed pattern (dominant constants substituted)
+    rtree: RTree  # its redistribution tree (root = core)
+    edge_paths: list[tuple[EdgeKey, ...]]  # heat-map paths, for bookkeeping
+
+
+class HeatMap:
+    """Single anonymous root (the core); each template inserted from the top."""
+
+    def __init__(self) -> None:
+        self.children: dict[EdgeKey, HeatEdge] = {}
+        self.root_meta = BoyerMoore()
+        self.root_var_seen = 0
+        self._clock = itertools.count(1)
+
+    # -------------------------------------------------------------- insert
+    @staticmethod
+    def _edge_key(e: TreeEdge) -> EdgeKey:
+        pred = e.pred.id if isinstance(e.pred, Const) else -1
+        return EdgeKey(pred, e.parent_is_subject)
+
+    def insert(self, tree: RTree) -> int:
+        """Merge a query's template into the map; returns the timestamp."""
+        ts = next(self._clock)
+        self._meta(tree.root, self.root_meta, is_root=True)
+
+        def rec(node: TreeNode, table: dict[EdgeKey, HeatEdge]) -> None:
+            for e in node.children:
+                k = self._edge_key(e)
+                he = table.get(k)
+                if he is None:
+                    he = HeatEdge(k)
+                    table[k] = he
+                he.count += 1
+                he.last_ts = ts
+                if isinstance(e.child.term, Const):
+                    he.child_meta.update(e.child.term.id)
+                else:
+                    he.child_var_seen += 1
+                rec(e.child, he.children)
+
+        rec(tree.root, self.children)
+        return ts
+
+    def _meta(self, node: TreeNode, bm: BoyerMoore, is_root: bool) -> None:
+        if isinstance(node.term, Const):
+            bm.update(node.term.id)
+        elif is_root:
+            self.root_var_seen += 1
+
+    # -------------------------------------------------------- hot detection
+    def hot_patterns(self, threshold: int) -> list[HotPattern]:
+        """Maximal root-anchored subtrees whose every edge count >= threshold.
+
+        Constants are substituted for template variables where a value truly
+        dominates (Boyer-Moore verified), as in §5.4.
+        """
+        out: list[HotPattern] = []
+        names = (f"v{i}" for i in itertools.count())
+
+        def dominant(bm: BoyerMoore, var_seen: int) -> int | None:
+            m = bm.majority()
+            if m is not None and bm.freq[m] > var_seen:
+                return m
+            return None
+
+        for k, he in self.children.items():
+            if he.count < threshold:
+                continue
+            root_const = dominant(self.root_meta, self.root_var_seen)
+            root_term: Term = (
+                Const(root_const) if root_const is not None else Var(next(names))
+            )
+            root_node = TreeNode(root_term, 0)
+            patterns: list[TriplePattern] = []
+            paths: list[tuple[EdgeKey, ...]] = []
+            uid = itertools.count(1)
+
+            def build(
+                he_: HeatEdge,
+                parent: TreeNode,
+                path: tuple[EdgeKey, ...],
+            ) -> None:
+                d = dominant(he_.child_meta, he_.child_var_seen)
+                child_term: Term = (
+                    Const(d) if d is not None else Var(next(names))
+                )
+                child = TreeNode(child_term, next(uid))
+                pred: Term = (
+                    Const(he_.key.pred) if he_.key.pred >= 0 else Var(next(names))
+                )
+                if he_.key.parent_is_subject:
+                    patterns.append(TriplePattern(parent.term, pred, child_term))
+                else:
+                    patterns.append(TriplePattern(child_term, pred, parent.term))
+                parent.children.append(
+                    TreeEdge(pred, child, he_.key.parent_is_subject,
+                             len(patterns) - 1)
+                )
+                paths.append(path + (he_.key,))
+                for ck, ce in he_.children.items():
+                    if ce.count >= threshold:
+                        build(ce, child, path + (he_.key,))
+
+            build(he, root_node, ())
+            q = Query(patterns, name="hot")
+            out.append(HotPattern(q, RTree(root_node, q), paths))
+        return out

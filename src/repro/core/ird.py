@@ -1,0 +1,231 @@
+"""Incremental ReDistribution — IRD (paper §5.3, Algorithm 3).
+
+Given a hot pattern's redistribution tree, the data it touches is re-hashed
+around the bindings of the core vertex, level by level:
+
+  Phase 1 — first-hop edges: triples adjacent to the core are hash
+  distributed on the core binding.  If the core is the triple's *subject*
+  nothing moves (footnote 7: the initial subject-hash partitioning already
+  placed them) and the edge is served by the main index.
+
+  Phase 2 — deeper edges: triples are collocated with their parent-edge
+  triples through a series of distributed semi-joins (the same machinery as
+  query evaluation): each worker projects the *propagating column* of its
+  parent-edge triples, the projection is exchanged (hash when the child
+  edge's source column is a subject, Observation 1 again; broadcast
+  otherwise), candidate triples are routed back and indexed in the per-edge
+  replica module.
+
+Replicas are maintained as raw triples in segregated storage modules so the
+normal index machinery (and eviction) applies — paper §5.5.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+
+from . import dsj
+from .heatmap import HotPattern
+from .pattern_index import ReplicaIndex
+from .query import O, S, TriplePattern, Var
+from .transform import RTree, TreeEdge, TreeNode
+from .triples import ShardedTripleStore
+
+__all__ = ["IRDStats", "IncrementalRedistributor"]
+
+_MAX_RETRIES = 7
+
+
+@dataclass
+class IRDStats:
+    comm_cells: int = 0
+    triples_indexed: int = 0  # data touched by the IRD process (Fig. 16a)
+    n_edges: int = 0
+
+    @property
+    def comm_bytes(self) -> int:
+        return self.comm_cells * 4
+
+
+class IncrementalRedistributor:
+    def __init__(
+        self,
+        main: ShardedTripleStore,
+        replicas: ReplicaIndex,
+        n_workers: int,
+        capacity: int = 1 << 12,
+    ):
+        self.main = main
+        self.replicas = replicas
+        self.w = n_workers
+        self.cap = capacity
+
+    # ------------------------------------------------------------- top level
+    def redistribute(self, hot: HotPattern) -> tuple[dict[int, str | None], IRDStats]:
+        """Algorithm 3 over every root-to-leaf path (DFS).  Returns
+        pattern_idx -> storage id (None = served by main index) + stats."""
+        stats = IRDStats()
+        tree = hot.rtree
+        storage: dict[int, str | None] = {}
+        # replica module holding each edge's triples (None = main index)
+        store_of_edge: dict[int, ShardedTripleStore | None] = {}
+        # the edge that *leads to* each tree node (object identity)
+        edge_into: dict[int, TreeEdge] = {}
+        for _, e, _ in tree.iter_edges():
+            edge_into[id(e.child)] = e
+
+        for parent, edge, depth in tree.iter_edges():
+            idx = edge.pattern_idx
+            if idx in storage:  # shared prefix already redistributed
+                continue
+            q = tree.query.patterns[idx]
+            stats.n_edges += 1
+            if depth == 0:
+                if edge.parent_is_subject:
+                    # footnote 7: subject-core edges stay in the main index
+                    # (but their matches count as data touched by IRD —
+                    # paper §6.4.3 counts "data in the main and replica
+                    # indices")
+                    storage[idx] = None
+                    store_of_edge[id(edge)] = None
+                    stats.triples_indexed += self._count_matches(q)
+                else:
+                    sid, st = self._hash_distribute_core_edge(q, stats)
+                    storage[idx] = sid
+                    store_of_edge[id(edge)] = st
+            else:
+                pedge = edge_into[id(parent)]
+                pstore = store_of_edge[id(pedge)]
+                pq = tree.query.patterns[pedge.pattern_idx]
+                # propagating column of the parent edge = its child side
+                prop_col = O if pedge.parent_is_subject else S
+                sid, st = self._collocate_edge(
+                    q, edge, pq, pstore, prop_col, stats
+                )
+                storage[idx] = sid
+                store_of_edge[id(edge)] = st
+        return storage, stats
+
+    def _count_matches(self, q: TriplePattern) -> int:
+        """Main-index matches of a pattern (touched-data accounting)."""
+        spec = dsj.PatternSpec.of(q)
+        consts = dsj.pattern_consts(q)
+        cap = self.cap
+        for _ in range(_MAX_RETRIES):
+            _, valid, total = dsj.match_rows(self.main, consts, spec, cap)
+            if int(total) <= cap:
+                return int(jnp.sum(valid))
+            cap = max(cap * 2, int(total))
+        return int(jnp.sum(valid))
+
+    # ----------------------------------------------------------- phase 1
+    def _hash_distribute_core_edge(
+        self, q: TriplePattern, stats: IRDStats
+    ) -> tuple[str, ShardedTripleStore]:
+        """Hash-distribute triples matching q on the core (object) binding."""
+        spec = dsj.PatternSpec.of(q)
+        consts = dsj.pattern_consts(q)
+        cap = self.cap
+        for _ in range(_MAX_RETRIES):
+            rows, valid, total = dsj.match_rows(self.main, consts, spec, cap)
+            if int(total) <= cap:
+                break
+            cap = max(cap * 2, int(total))
+        import jax
+
+        w = self.w
+
+        def per_worker(rows_w, valid_w):
+            dest = (dsj.jnp_hash_ids(rows_w[:, O]) % w).astype(jnp.int32)
+            from .relalg import bucket_by_dest
+
+            return bucket_by_dest(rows_w, dest, valid_w, w, cap)
+
+        cap_peer = cap
+        for _ in range(_MAX_RETRIES):
+            send, svalid, maxw = jax.vmap(per_worker)(rows, valid)
+            if int(jnp.max(maxw)) <= cap_peer:
+                break
+            cap_peer = cap = max(cap_peer * 2, int(jnp.max(maxw)))
+        recv = jnp.swapaxes(send, 0, 1).reshape(self.w, -1, 3)
+        rvalid = jnp.swapaxes(svalid, 0, 1).reshape(self.w, -1)
+        diag = jnp.sum(svalid[jnp.arange(w), jnp.arange(w)])
+        stats.comm_cells += int((jnp.sum(svalid) - diag) * 3)
+        st = ShardedTripleStore.from_device_rows(recv, rvalid, self.main.n_ids)
+        stats.triples_indexed += int(jnp.sum(st.counts))
+        sid = self.replicas.new_id()
+        self.replicas.put(sid, st)
+        return sid, st
+
+    # ----------------------------------------------------------- phase 2
+    def _collocate_edge(
+        self,
+        q: TriplePattern,
+        edge: TreeEdge,
+        parent_q: TriplePattern,
+        parent_store: ShardedTripleStore | None,
+        prop_col: int,
+        stats: IRDStats,
+    ) -> tuple[str, ShardedTripleStore]:
+        """Collocate triples matching q with their parent-edge triples
+        (a DSJ between the parent replica module and the main index)."""
+        pstore = parent_store if parent_store is not None else self.main
+        pspec = dsj.PatternSpec.of(parent_q)
+        pconsts = dsj.pattern_consts(parent_q)
+        cap = self.cap
+        for _ in range(_MAX_RETRIES):
+            prows, pvalid, total = dsj.match_rows(pstore, pconsts, pspec, cap)
+            if int(total) <= cap:
+                break
+            cap = max(cap * 2, int(total))
+
+        # project + dedupe the propagating column
+        cap_proj = cap
+        for _ in range(_MAX_RETRIES):
+            proj, projv, nuniq = dsj.project_unique(
+                prows, pvalid, prop_col, cap_proj
+            )
+            if int(nuniq) <= cap_proj:
+                break
+            cap_proj = max(cap_proj * 2, int(nuniq))
+
+        # source column of the child edge: where the parent vertex binds
+        src_col = S if edge.parent_is_subject else O
+        if src_col == S:
+            cap_peer = cap_proj
+            for _ in range(_MAX_RETRIES):
+                recv, rvalid, cells, maxb = dsj.exchange_hash(
+                    proj, projv, cap_peer
+                )
+                if int(maxb) <= cap_peer:
+                    break
+                cap_peer = max(cap_peer * 2, int(maxb))
+            stats.comm_cells += int(cells)
+        else:
+            recv, rvalid, cells = dsj.exchange_broadcast(proj, projv)
+            stats.comm_cells += int(cells)
+
+        spec = dsj.PatternSpec.of(q)
+        consts = dsj.pattern_consts(q)
+        cap_flat = cap_cand = self.cap
+        for _ in range(_MAX_RETRIES):
+            cand, cvalid, cells, maxf, maxc = dsj.probe_and_reply(
+                self.main, recv, rvalid, consts, spec, src_col,
+                cap_flat, cap_cand,
+            )
+            if int(maxf) <= cap_flat and int(maxc) <= cap_cand:
+                break
+            if int(maxf) > cap_flat:
+                cap_flat = max(cap_flat * 2, int(maxf))
+            if int(maxc) > cap_cand:
+                cap_cand = max(cap_cand * 2, int(maxc))
+        stats.comm_cells += int(cells)
+
+        flat = cand.reshape(self.w, -1, 3)
+        flatv = cvalid.reshape(self.w, -1)
+        st = ShardedTripleStore.from_device_rows(flat, flatv, self.main.n_ids)
+        stats.triples_indexed += int(jnp.sum(st.counts))
+        sid = self.replicas.new_id()
+        self.replicas.put(sid, st)
+        return sid, st

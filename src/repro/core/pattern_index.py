@@ -1,0 +1,307 @@
+"""Pattern Index + Replica Index (paper §5.5) and the parallel-mode executor.
+
+The Pattern Index (PI) lives at the master and mirrors the heat-map
+structure, but only stores *redistributed* patterns.  Each PI edge may be
+specialized to a dominant constant at the child vertex; edges carry LRU
+timestamps.  A query is answerable in parallel mode iff its redistribution
+tree is contained in the PI starting at the root (core).
+
+The Replica Index is the worker-side dual: one segregated *storage module*
+per PI edge (its own ShardedTripleStore), never merged into the main indexes
+— the four reasons of §5.5.  Edges whose subject is the core are not
+replicated: their data comes straight from the main index (initial
+subject-hash locality).
+
+Eviction: LRU over root-level PI subtrees under a per-worker triple budget.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import dsj
+from .executor import ExecutorError, QueryStats, _append_plan, _shared_checks
+from .heatmap import EdgeKey
+from .query import Const, O, Query, S, Term, TriplePattern, Var
+from .relation import Relation
+from .transform import RTree, TreeEdge, TreeNode
+from .triples import ShardedTripleStore
+
+__all__ = ["PatternIndex", "ReplicaIndex", "ParallelExecutor", "PIEdge"]
+
+_MAX_RETRIES = 7
+
+
+@dataclass
+class PIEdge:
+    key: EdgeKey
+    child_const: int | None  # dominant-constant specialization (or generic)
+    storage_id: str | None  # replica module; None -> served by main index
+    last_ts: int = 0
+    children: dict[tuple[EdgeKey, int | None], "PIEdge"] = field(
+        default_factory=dict
+    )
+
+    def iter_edges(self):
+        yield self
+        for c in self.children.values():
+            yield from c.iter_edges()
+
+
+class PatternIndex:
+    """Master-side index of redistributed patterns (forest by root spec)."""
+
+    def __init__(self) -> None:
+        # (root_const | None) -> {(EdgeKey, child_const) -> PIEdge}
+        self.roots: dict[int | None, dict[tuple[EdgeKey, int | None], PIEdge]] = {}
+        self._clock = itertools.count(1)
+
+    # ---------------------------------------------------------------- insert
+    @staticmethod
+    def _key_of(e: TreeEdge) -> EdgeKey:
+        pred = e.pred.id if isinstance(e.pred, Const) else -1
+        return EdgeKey(pred, e.parent_is_subject)
+
+    def insert(self, tree: RTree, storage_ids: dict[int, str | None]) -> None:
+        """Insert a redistributed pattern; storage_ids maps pattern_idx ->
+        replica module id (None when the edge is served by the main index)."""
+        ts = next(self._clock)
+        root_const = (
+            tree.root.term.id if isinstance(tree.root.term, Const) else None
+        )
+        table = self.roots.setdefault(root_const, {})
+
+        def rec(node: TreeNode, tbl: dict) -> None:
+            for e in node.children:
+                ck = (
+                    e.child.term.id
+                    if isinstance(e.child.term, Const)
+                    else None
+                )
+                k = (self._key_of(e), ck)
+                pie = tbl.get(k)
+                if pie is None:
+                    pie = PIEdge(k[0], ck, storage_ids.get(e.pattern_idx))
+                    tbl[k] = pie
+                elif storage_ids.get(e.pattern_idx) is not None:
+                    pie.storage_id = storage_ids[e.pattern_idx]
+                pie.last_ts = ts
+                rec(e.child, pie.children)
+
+        rec(tree.root, table)
+
+    # ----------------------------------------------------------------- match
+    def match(self, tree: RTree) -> list[tuple[TreeEdge, PIEdge]] | None:
+        """Containment check (§5.5): every edge of ``tree`` must exist in the
+        PI from the root down, with compatible constant specializations.
+        Returns the matched (query edge, PI edge) pairs, or None."""
+        root_specs: list[int | None] = [None]
+        if isinstance(tree.root.term, Const):
+            root_specs.insert(0, tree.root.term.id)
+        for spec in root_specs:
+            table = self.roots.get(spec)
+            if table is None:
+                continue
+            out: list[tuple[TreeEdge, PIEdge]] = []
+            if self._match_level(tree.root, table, out):
+                ts = next(self._clock)
+                for _, pie in out:
+                    pie.last_ts = ts  # LRU touch
+                return out
+        return None
+
+    def _match_level(self, node: TreeNode, tbl: dict, out: list) -> bool:
+        for e in node.children:
+            k = self._key_of(e)
+            cands: list[tuple[EdgeKey, int | None]] = [(k, None)]
+            if isinstance(e.child.term, Const):
+                cands.insert(0, (k, e.child.term.id))
+            hit = None
+            for ck in cands:
+                pie = tbl.get(ck)
+                if pie is not None and self._match_level(
+                    e.child, pie.children, out
+                ):
+                    hit = pie
+                    break
+            if hit is None:
+                return False
+            out.append((e, hit))
+        return True
+
+    # -------------------------------------------------------------- eviction
+    def evict_lru_root(self) -> list[str] | None:
+        """Drop the least-recently-used root-level subtree that actually
+        holds replicated data; returns its storage ids, or None when nothing
+        evictable remains (paper §5.5: the hierarchical modules make eviction
+        cheap and local; zero-replica patterns cost nothing to keep)."""
+        lru: tuple[int | None, tuple, int] | None = None
+        for rspec, tbl in self.roots.items():
+            for key, pie in tbl.items():
+                if not any(e.storage_id for e in pie.iter_edges()):
+                    continue
+                ts = max(e.last_ts for e in pie.iter_edges())
+                if lru is None or ts < lru[2]:
+                    lru = (rspec, key, ts)
+        if lru is None:
+            return None
+        pie = self.roots[lru[0]].pop(lru[1])
+        if not self.roots[lru[0]]:
+            del self.roots[lru[0]]
+        return [e.storage_id for e in pie.iter_edges() if e.storage_id]
+
+    def n_edges(self) -> int:
+        return sum(
+            sum(1 for _ in pie.iter_edges())
+            for tbl in self.roots.values()
+            for pie in tbl.values()
+        )
+
+
+class ReplicaIndex:
+    """Worker-side replica storage: one ShardedTripleStore per PI edge."""
+
+    def __init__(self, n_workers: int) -> None:
+        self.w = n_workers
+        self.modules: dict[str, ShardedTripleStore] = {}
+        self._ids = itertools.count()
+
+    def new_id(self) -> str:
+        return f"rep{next(self._ids)}"
+
+    def put(self, sid: str, store: ShardedTripleStore) -> None:
+        self.modules[sid] = store
+
+    def get(self, sid: str) -> ShardedTripleStore:
+        return self.modules[sid]
+
+    def drop(self, sid: str) -> None:
+        self.modules.pop(sid, None)
+
+    # ------------------------------------------------------------ accounting
+    def per_worker_triples(self) -> np.ndarray:
+        tot = np.zeros(self.w, dtype=np.int64)
+        for st in self.modules.values():
+            tot += np.asarray(st.counts, dtype=np.int64)
+        return tot
+
+    def max_per_worker(self) -> int:
+        t = self.per_worker_triples()
+        return int(t.max()) if t.size else 0
+
+
+class ParallelExecutor:
+    """Parallel-mode evaluation (§3.2 "Parallel Mode", §5.5).
+
+    Walks the query's redistribution tree in DFS order; every join is a
+    local probe against either the main index (edges whose subject is the
+    core) or the matched PI edge's replica module.  Zero communication.
+    """
+
+    def __init__(
+        self,
+        main: ShardedTripleStore,
+        replicas: ReplicaIndex,
+        n_workers: int,
+    ):
+        self.main = main
+        self.replicas = replicas
+        self.w = n_workers
+
+    def _store_for(self, qedge: TreeEdge, pie: PIEdge, depth: int
+                   ) -> ShardedTripleStore:
+        if depth == 0 and qedge.parent_is_subject:
+            return self.main  # core-subject edges live in the main index
+        if pie.storage_id is None:
+            return self.main
+        return self.replicas.get(pie.storage_id)
+
+    def execute(
+        self,
+        tree: RTree,
+        matches: list[tuple[TreeEdge, PIEdge]],
+        capacity: int = 1 << 12,
+    ) -> tuple[Relation, QueryStats]:
+        stats = QueryStats(mode="parallel-replica")
+        pie_of = {id(qe): pie for qe, pie in matches}
+        query = tree.query
+        edges = tree.iter_edges()  # DFS pre-order: parents precede children
+        rel: Relation | None = None
+
+        for parent, edge, depth in edges:
+            q = query.patterns[edge.pattern_idx]
+            pie = pie_of[id(edge)]
+            store = self._store_for(edge, pie, depth)
+            spec = dsj.PatternSpec.of(q)
+            consts = dsj.pattern_consts(q)
+            if rel is None:
+                rel = self._first(store, q, spec, consts, capacity, stats)
+                # seed: if the root term is a variable it is bound by this
+                # pattern; constants are enforced by the pattern itself
+                continue
+            join_term = parent.term
+            if isinstance(join_term, Var) and join_term in rel.vars:
+                rel = self._local_join(
+                    store, rel, q, spec, consts, join_term,
+                    S if edge.parent_is_subject else O, capacity, stats,
+                )
+            else:
+                # parent is a constant vertex: the pattern is anchored by the
+                # constant itself; semi-cartesian patterns are matched then
+                # verified through shared variables (duplicated vertices)
+                rel = self._anchored_join(
+                    store, rel, q, spec, consts, capacity, stats
+                )
+            stats.n_local_joins += 1
+        assert rel is not None
+        return rel, stats
+
+    # ------------------------------------------------------------- internals
+    def _first(self, store, q, spec, consts, cap, stats) -> Relation:
+        for _ in range(_MAX_RETRIES):
+            cols, valid, total = dsj.match_first(store, consts, spec, cap)
+            if int(total) <= cap:
+                vars_ = []
+                keep = []
+                for i, (v, _c) in enumerate(q.var_cols()):
+                    if v not in vars_:
+                        vars_.append(v)
+                        keep.append(i)
+                if len(keep) != len(q.var_cols()):
+                    cols = cols[..., keep]
+                return Relation(cols, valid, tuple(vars_))
+            cap = max(cap * 2, int(total))
+            stats.n_retries += 1
+        raise ExecutorError("parallel first match exceeded retries")
+
+    def _local_join(
+        self, store, rel, q, spec, consts, join_var, probe_col, cap, stats
+    ) -> Relation:
+        c1 = rel.col_of(join_var)
+        checks = _shared_checks(rel.vars, q, join_var)
+        append_cols, out_vars = _append_plan(rel.vars, q)
+        for _ in range(_MAX_RETRIES):
+            cols, valid, total = dsj.local_probe_join(
+                store, rel.cols, rel.valid, consts, spec, c1, probe_col,
+                checks, append_cols, cap,
+            )
+            if int(total) <= cap:
+                return Relation(cols, valid, out_vars)
+            cap = max(cap * 2, int(total))
+            stats.n_retries += 1
+        raise ExecutorError("parallel local join exceeded retries")
+
+    def _anchored_join(self, store, rel, q, spec, consts, cap, stats
+                       ) -> Relation:
+        """Join with a constant-anchored pattern via any shared variable."""
+        shared = [v for v in q.vars if v in rel.vars]
+        if not shared:
+            raise ExecutorError("disconnected parallel join")
+        join_var = shared[0]
+        probe_col = q.col_of(join_var)
+        return self._local_join(
+            store, rel, q, spec, consts, join_var, probe_col, cap, stats
+        )

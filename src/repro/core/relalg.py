@@ -1,0 +1,140 @@
+"""Static-shape relational-algebra primitives for the SPMD data plane.
+
+RDF joins produce data-dependent result sizes; XLA requires static shapes.
+Every intermediate relation is therefore a fixed-capacity buffer + validity
+mask (see DESIGN.md §4).  This module provides the vectorized building blocks
+used by the distributed semi-join (dsj.py) and the parallel-mode executor:
+
+  * ``expand``        — variable-multiplicity join expansion via the cumsum /
+                        searchsorted trick (each left row emits count_i rows).
+  * ``compact``       — stable compaction of masked rows to a prefix.
+  * ``dedupe_sorted`` — mask duplicates in a sorted array.
+  * ``bucket_by_dest``— build fixed-capacity per-destination send buffers for
+                        hash distribution (all_to_all exchange).
+
+All functions are *per-worker* (1-D / 2-D) and are ``vmap``-ed over the
+leading worker axis by callers.  Everything is int32/int64-safe and mask
+correct for padded rows.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "INVALID",
+    "expand",
+    "compact",
+    "dedupe_sorted",
+    "bucket_by_dest",
+    "unique_compact",
+]
+
+# Sentinel for padded/invalid id slots.  Ids are non-negative int32.
+INVALID = jnp.int32(-1)
+I64MAX = jnp.iinfo(jnp.int64).max
+
+
+def expand(
+    lo: jax.Array, hi: jax.Array, out_cap: int
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Expand per-left-row ranges [lo_i, hi_i) into a flat row list.
+
+    Returns (left_idx, right_pos, valid, total):
+      left_idx[j]  index of the left row that produced output j
+      right_pos[j] position inside that row's range (lo_i + offset)
+      valid[j]     output j is live
+      total        true (unclamped) number of output rows -> overflow check
+    """
+    counts = jnp.maximum(hi - lo, 0)
+    cum = jnp.cumsum(counts)
+    total = cum[-1] if counts.size else jnp.int32(0)
+    j = jnp.arange(out_cap, dtype=cum.dtype)
+    left_idx = jnp.searchsorted(cum, j, side="right")
+    left_idx = jnp.minimum(left_idx, counts.shape[0] - 1).astype(jnp.int32)
+    start = jnp.where(left_idx > 0, cum[jnp.maximum(left_idx - 1, 0)], 0)
+    within = j - start
+    right_pos = (lo[left_idx] + within).astype(jnp.int32)
+    valid = j < total
+    return left_idx, right_pos, valid, total.astype(jnp.int64)
+
+
+def compact(values: jax.Array, valid: jax.Array, out_cap: int) -> tuple[jax.Array, jax.Array]:
+    """Stable-compact masked rows of ``values`` (n, ...) into (out_cap, ...).
+
+    Rows beyond the number of valid inputs are masked off; if more than
+    ``out_cap`` rows are valid the surplus is dropped (caller checks count).
+    Returns (compacted, out_valid).
+    """
+    v = valid.astype(jnp.int32)
+    pos = jnp.cumsum(v) - 1  # destination slot per valid row
+    n_valid = jnp.sum(v)
+    dest = jnp.where(valid, pos, out_cap)  # invalid rows -> dropped slot
+    flat_shape = (out_cap + 1,) + values.shape[1:]
+    out = jnp.zeros(flat_shape, values.dtype)
+    out = out.at[dest].set(values, mode="drop")
+    out_valid = jnp.arange(out_cap) < jnp.minimum(n_valid, out_cap)
+    return out[:out_cap], out_valid
+
+
+def dedupe_sorted(values: jax.Array, valid: jax.Array) -> jax.Array:
+    """Given sorted ``values`` with a validity mask, mask all duplicates.
+
+    Invalid entries must be sorted to the end (use I64MAX / INT32_MAX pads).
+    Returns the "is first occurrence and valid" mask.
+    """
+    prev = jnp.concatenate([values[:1] - 1, values[:-1]]) if values.size else values
+    first = values != prev
+    first = first.at[0].set(True) if values.size else first
+    return first & valid
+
+
+def unique_compact(
+    values: jax.Array, valid: jax.Array, out_cap: int, pad: jax.Array | int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Sort + dedupe + compact.  Returns (uniq (out_cap,), mask, n_unique)."""
+    big = jnp.asarray(pad, values.dtype)
+    keyed = jnp.where(valid, values, big)
+    order = jnp.argsort(keyed)
+    sv = keyed[order]
+    svalid = valid[order]
+    mask = dedupe_sorted(sv, svalid)
+    uniq, uvalid = compact(sv, mask, out_cap)
+    uniq = jnp.where(uvalid, uniq, big)
+    return uniq, uvalid, jnp.sum(mask.astype(jnp.int64))
+
+
+def bucket_by_dest(
+    values: jax.Array,  # (n, k) payload rows
+    dest: jax.Array,  # (n,) destination worker per row
+    valid: jax.Array,  # (n,)
+    n_dest: int,
+    cap_peer: int,
+    pad: int = -1,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Build per-destination send buffers for an all_to_all exchange.
+
+    Returns (send (n_dest, cap_peer, k), send_valid (n_dest, cap_peer),
+    overflow_total (max rows wanted by any destination, int64)).
+
+    Implementation: sort rows by destination, then each destination d reads
+    the contiguous slice [start_d, start_{d+1}) — O(n log n + n_dest*cap_peer)
+    with only gathers (TPU-friendly; no serial scatters).
+    """
+    n = values.shape[0]
+    d = jnp.where(valid, dest, n_dest).astype(jnp.int32)  # invalid -> overflow bucket
+    order = jnp.argsort(d, stable=True)
+    ds = d[order]
+    vs = values[order]
+    starts = jnp.searchsorted(ds, jnp.arange(n_dest + 1, dtype=ds.dtype), side="left")
+    lo = starts[:-1]
+    hi = starts[1:]
+    idx = lo[:, None] + jnp.arange(cap_peer, dtype=jnp.int32)[None, :]
+    send_valid = idx < hi[:, None]
+    idx_c = jnp.minimum(idx, n - 1)
+    send = vs[idx_c]
+    send = jnp.where(send_valid[..., None], send, jnp.asarray(pad, values.dtype))
+    max_wanted = jnp.max(hi - lo) if n_dest else jnp.int32(0)
+    return send, send_valid, max_wanted.astype(jnp.int64)

@@ -1,0 +1,275 @@
+"""Worker storage module (paper §3.2) — TPU-idiomatic sorted-array indexes.
+
+AdHash workers keep three hash indexes (P, PS, PO).  Hash maps do not
+vectorize on TPU, so each worker shard is stored twice, sorted by the
+composite keys (p, s) and (p, o); probes are vectorized binary searches
+(``searchsorted``).  Same supported operations as the paper:
+
+  1. given p            -> all (s, o)          [P-index  = ps-sorted range]
+  2. given (s, p)       -> all o               [PS-index = ps-sorted range]
+  3. given (o, p)       -> all s               [PO-index = po-sorted range]
+
+Global view: every array carries a leading worker axis W and is shardable on
+the mesh ``data`` axis; per-worker ops are ``vmap``-ed over it.  Padded rows
+carry key = INT64_MAX so they sort to the end and never match a probe.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .query import O, P, S
+from .relalg import expand
+
+__all__ = ["ShardedTripleStore", "match_ranges", "probe_values", "gather_rows"]
+
+I64MAX = np.iinfo(np.int64).max
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class ShardedTripleStore:
+    """(W, capT, 3) twice-sorted triple shards + composite probe keys."""
+
+    spo_ps: jax.Array  # (W, capT, 3) sorted by (p, s, o)
+    keys_ps: jax.Array  # (W, capT) int64 = p*NID + s  (pad: I64MAX)
+    spo_po: jax.Array  # (W, capT, 3) sorted by (p, o, s)
+    keys_po: jax.Array  # (W, capT) int64 = p*NID + o  (pad: I64MAX)
+    counts: jax.Array  # (W,) int32 live triples per worker
+    n_ids: int  # static: id-space size (NID)
+
+    # ------------------------------------------------------------- pytree
+    def tree_flatten(self):
+        return (
+            (self.spo_ps, self.keys_ps, self.spo_po, self.keys_po, self.counts),
+            self.n_ids,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, n_ids=aux)
+
+    @property
+    def n_workers(self) -> int:
+        return self.spo_ps.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.spo_ps.shape[1]
+
+    # -------------------------------------------------------------- build
+    @classmethod
+    def build(
+        cls,
+        triples: np.ndarray,
+        assign: np.ndarray,
+        n_workers: int,
+        n_ids: int | None = None,
+        cap: int | None = None,
+    ) -> "ShardedTripleStore":
+        """Host-side bulk load: partition, pad, sort (bootstrap phase)."""
+        triples = np.asarray(triples, dtype=np.int64)
+        if n_ids is None:
+            n_ids = int(triples.max()) + 1 if triples.size else 1
+        counts = np.bincount(assign, minlength=n_workers)
+        if cap is None:
+            cap = max(int(counts.max()), 1)
+        spo_ps = np.zeros((n_workers, cap, 3), dtype=np.int32)
+        keys_ps = np.full((n_workers, cap), I64MAX, dtype=np.int64)
+        spo_po = np.zeros((n_workers, cap, 3), dtype=np.int32)
+        keys_po = np.full((n_workers, cap), I64MAX, dtype=np.int64)
+        for w in range(n_workers):
+            rows = triples[assign == w]
+            n = len(rows)
+            if n > cap:
+                raise ValueError(f"worker {w} shard {n} exceeds capacity {cap}")
+            if n:
+                kps = rows[:, P] * n_ids + rows[:, S]
+                o1 = np.lexsort((rows[:, O], kps))
+                spo_ps[w, :n] = rows[o1]
+                keys_ps[w, :n] = kps[o1]
+                kpo = rows[:, P] * n_ids + rows[:, O]
+                o2 = np.lexsort((rows[:, S], kpo))
+                spo_po[w, :n] = rows[o2]
+                keys_po[w, :n] = kpo[o2]
+        return cls(
+            spo_ps=jnp.asarray(spo_ps),
+            keys_ps=jnp.asarray(keys_ps),
+            spo_po=jnp.asarray(spo_po),
+            keys_po=jnp.asarray(keys_po),
+            counts=jnp.asarray(counts, dtype=jnp.int32),
+            n_ids=int(n_ids),
+        )
+
+    @classmethod
+    def from_device_rows(
+        cls, rows: jax.Array, valid: jax.Array, n_ids: int
+    ) -> "ShardedTripleStore":
+        """Build a store from device-resident (W, cap, 3) rows + mask.
+
+        Used by IRD to index replicated candidate triples without a host
+        round-trip: per-worker sort by both composite keys (vmapped).
+        Duplicate rows (same triple shipped for two probe values) are masked.
+        """
+        nid64 = jnp.int64(n_ids)
+
+        def per_worker(r, v):
+            s = r[:, 0].astype(jnp.int64)
+            p = r[:, 1].astype(jnp.int64)
+            o = r[:, 2].astype(jnp.int64)
+            # full composite key for exact-duplicate elimination
+            full = (p * nid64 + s) * nid64 + o
+            full = jnp.where(v, full, I64MAX)
+            order = jnp.argsort(full)
+            fsorted = full[order]
+            rsorted = r[order]
+            prev = jnp.concatenate([fsorted[:1] - 1, fsorted[:-1]])
+            keep = (fsorted != prev) & (fsorted != I64MAX)
+            kps = jnp.where(keep, p[order] * nid64 + s[order], I64MAX)
+            kpo = jnp.where(keep, p[order] * nid64 + o[order], I64MAX)
+            o1 = jnp.argsort(kps)
+            o2 = jnp.argsort(kpo)
+            return (
+                rsorted[o1],
+                kps[o1],
+                rsorted[o2],
+                kpo[o2],
+                jnp.sum(keep).astype(jnp.int32),
+            )
+
+        spo_ps, keys_ps, spo_po, keys_po, counts = jax.vmap(per_worker)(
+            rows, valid
+        )
+        return cls(spo_ps, keys_ps, spo_po, keys_po, counts, n_ids=int(n_ids))
+
+    @classmethod
+    def empty(cls, n_workers: int, cap: int, n_ids: int) -> "ShardedTripleStore":
+        return cls(
+            spo_ps=jnp.zeros((n_workers, cap, 3), jnp.int32),
+            keys_ps=jnp.full((n_workers, cap), I64MAX, jnp.int64),
+            spo_po=jnp.zeros((n_workers, cap, 3), jnp.int32),
+            keys_po=jnp.full((n_workers, cap), I64MAX, jnp.int64),
+            counts=jnp.zeros((n_workers,), jnp.int32),
+            n_ids=n_ids,
+        )
+
+    # ------------------------------------------------- host-side utilities
+    def to_numpy(self) -> np.ndarray:
+        """All live triples, host-side (tests / collection)."""
+        out = []
+        counts = np.asarray(self.counts)
+        spo = np.asarray(self.spo_ps)
+        for w in range(self.n_workers):
+            out.append(spo[w, : counts[w]])
+        return np.concatenate(out, axis=0) if out else np.zeros((0, 3), np.int32)
+
+
+# =============================================================== probe kernels
+# All kernels below are per-worker and vmapped over the leading W axis.
+
+
+def _range_1(keys: jax.Array, lo_key: jax.Array, hi_key: jax.Array):
+    lo = jnp.searchsorted(keys, lo_key, side="left")
+    hi = jnp.searchsorted(keys, hi_key, side="left")
+    return lo.astype(jnp.int32), hi.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("use_po", "nid"))
+def match_ranges(
+    store: ShardedTripleStore,
+    p_const: jax.Array,  # scalar int32; -1 = variable predicate
+    sk_const: jax.Array,  # scalar int32; -1 = no s/o constant bound
+    use_po: bool,  # probe (p,o) on PO-index instead of (p,s) on PS-index
+    nid: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-worker contiguous match range [lo, hi) for a triple pattern.
+
+    Handles the paper's three search ops: (p), (p,s), (p,o); a variable
+    predicate degrades to the full shard range (paper §3.2: "iterate over all
+    predicates").
+    """
+    keys = store.keys_po if use_po else store.keys_ps
+    nid64 = jnp.int64(nid)
+    p64 = p_const.astype(jnp.int64)
+    k64 = sk_const.astype(jnp.int64)
+
+    def per_worker(keys_w, count_w):
+        lo_key = jnp.where(
+            p_const < 0, jnp.int64(0), p64 * nid64 + jnp.maximum(k64, 0)
+        )
+        hi_key = jnp.where(
+            p_const < 0,
+            jnp.int64(I64MAX - 1),
+            jnp.where(sk_const < 0, (p64 + 1) * nid64, p64 * nid64 + k64 + 1),
+        )
+        lo, hi = _range_1(keys_w, lo_key, hi_key)
+        return lo, jnp.minimum(hi, count_w)
+
+    return jax.vmap(per_worker)(keys, store.counts)
+
+
+@partial(jax.jit, static_argnames=("col", "nid"))
+def probe_values(
+    store: ShardedTripleStore,
+    p_const: jax.Array,  # scalar int32 (>=0 when col is S or O)
+    values: jax.Array,  # (W, n) int32 probe values (bindings), -1 pad
+    valid: jax.Array,  # (W, n)
+    col: int,  # which column the values bind: S(0), P(1) or O(2)
+    nid: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Vectorized semi-join probe.
+
+    col=S: triples with (p=p_const, s=v)   [PS-index]
+    col=O: triples with (p=p_const, o=v)   [PO-index]
+    col=P: triples with (p=v)              [P-index = PS range per predicate]
+    Returns per-value ranges (lo, hi), each (W, n).
+    """
+    keys = store.keys_po if col == O else store.keys_ps
+    nid64 = jnp.int64(nid)
+    p64 = p_const.astype(jnp.int64)
+
+    def per_worker(keys_w, count_w, vals_w, valid_w):
+        v64 = jnp.maximum(vals_w.astype(jnp.int64), 0)
+        if col == P:
+            klo = v64 * nid64
+            khi = (v64 + 1) * nid64
+        else:
+            klo = p64 * nid64 + v64
+            khi = klo + 1
+        lo = jnp.searchsorted(keys_w, klo, side="left").astype(jnp.int32)
+        hi = jnp.searchsorted(keys_w, khi, side="left").astype(jnp.int32)
+        hi = jnp.minimum(hi, count_w)
+        lo = jnp.where(valid_w, lo, 0)
+        hi = jnp.where(valid_w, hi, 0)
+        hi = jnp.maximum(hi, lo)
+        return lo, hi
+
+    return jax.vmap(per_worker)(keys, store.counts, values, valid)
+
+
+@partial(jax.jit, static_argnames=("cap_out", "use_po"))
+def gather_rows(
+    store: ShardedTripleStore,
+    lo: jax.Array,  # (W, n) range starts from probe_values/match_ranges
+    hi: jax.Array,  # (W, n)
+    cap_out: int,
+    use_po: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Expand per-value ranges into triple rows.
+
+    Returns (rows (W, cap_out, 3), src_idx (W, cap_out) index of the probe
+    value that produced each row, valid (W, cap_out), total (W,) unclamped).
+    """
+    spo = store.spo_po if use_po else store.spo_ps
+
+    def per_worker(spo_w, lo_w, hi_w):
+        left, pos, valid, total = expand(lo_w, hi_w, cap_out)
+        rows = spo_w[jnp.minimum(pos, spo_w.shape[0] - 1)]
+        rows = jnp.where(valid[:, None], rows, -1)
+        return rows, left, valid, total
+
+    return jax.vmap(per_worker)(spo, lo, hi)

@@ -1,0 +1,60 @@
+"""LM data pipeline: deterministic, shardable synthetic token streams.
+
+Token ids follow a Zipf distribution (real vocabularies are Zipfian — the
+same skew that makes RDF predicates hot in the paper makes token rows hot
+here, which is what the adaptive embedding controller exploits).  The stream
+is seeded per (step, host) so the pipeline is elastic: any host can
+regenerate any shard of any step — the data-side half of failure recovery.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig
+
+__all__ = ["zipf_tokens", "make_batch", "synthetic_batches"]
+
+
+def zipf_tokens(rng: np.random.Generator, vocab: int, shape: tuple[int, ...],
+                alpha: float = 1.1) -> np.ndarray:
+    """Zipf-distributed ids in [0, vocab); vectorized inverse-CDF sampling."""
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    probs = ranks ** -alpha
+    probs /= probs.sum()
+    cdf = np.cumsum(probs)
+    u = rng.random(size=shape)
+    ids = np.searchsorted(cdf, u).astype(np.int32)
+    # permute ranks -> ids so "hot" ids are scattered over the vocab space
+    perm_rng = np.random.default_rng(12345)
+    perm = perm_rng.permutation(vocab).astype(np.int32)
+    return perm[np.minimum(ids, vocab - 1)]
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, step: int,
+               seed: int = 0) -> dict:
+    rng = np.random.default_rng((seed, step))
+    toks = zipf_tokens(rng, cfg.vocab_size, (batch, seq + 1))
+    out = {
+        "tokens": jnp.asarray(toks[:, :-1]),
+        "labels": jnp.asarray(toks[:, 1:]),
+    }
+    if cfg.family == "vlm":
+        out["patches"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.vlm.n_patches, cfg.vlm.d_vision)),
+            jnp.float32,
+        )
+    if cfg.family == "audio":
+        out["frames"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.encdec.n_frames, cfg.d_model)),
+            jnp.float32,
+        )
+    return out
+
+
+def synthetic_batches(cfg: ModelConfig, batch: int, seq: int, n_steps: int,
+                      seed: int = 0) -> Iterator[dict]:
+    for step in range(n_steps):
+        yield make_batch(cfg, batch, seq, step, seed)

@@ -1,0 +1,46 @@
+"""Jitted public wrapper for the flash-attention kernel.
+
+Handles head-dim padding to the MXU lane width (128), (B, T, H, d) <->
+(BH, T, d) layout, and the interpret-mode switch (CPU validation vs TPU).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_fwd
+
+__all__ = ["flash_attention"]
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
+                                   "interpret"))
+def flash_attention(
+    q: jax.Array,  # (B, T, H, d)
+    k: jax.Array,  # (B, S, H, d)  (KV heads already repeated to H)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, t, h, d = q.shape
+    s = k.shape[1]
+    d_pad = -(-d // 128) * 128 if not interpret else d
+    if d_pad != d:
+        pad = ((0, 0), (0, 0), (0, 0), (0, d_pad - d))
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * h, t, d_pad)
+    kf = jnp.moveaxis(k, 2, 1).reshape(b * h, s, d_pad)
+    vf = jnp.moveaxis(v, 2, 1).reshape(b * h, s, d_pad)
+    o = flash_attention_fwd(
+        qf, kf, vf, causal=causal, block_q=min(block_q, t),
+        block_kv=min(block_kv, s), interpret=interpret,
+    )
+    o = o.reshape(b, h, t, d_pad)[..., :d]
+    return jnp.moveaxis(o, 1, 2)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """Naive softmax attention.  q/k/v: (BH, T|S, d)."""
+    d = q.shape[-1]
+    s = jnp.einsum(
+        "btd,bsd->bts", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (d ** -0.5)
+    if causal:
+        t, s_len = s.shape[-2], s.shape[-1]
+        mask = jnp.tril(jnp.ones((t, s_len), bool), k=s_len - t)
+        s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bts,bsd->btd", w, v.astype(jnp.float32)).astype(q.dtype)

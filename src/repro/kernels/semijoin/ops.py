@@ -1,0 +1,26 @@
+"""Jitted wrapper: per-worker batched semijoin probe (vmapped kernel)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .semijoin import semijoin_probe
+
+__all__ = ["batched_semijoin_probe"]
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def batched_semijoin_probe(
+    keys: jax.Array,  # (W, N) per-worker sorted keys
+    probes: jax.Array,  # (W, M) per-worker probe keys
+    *,
+    block_m: int = 256,
+    block_n: int = 2048,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    fn = partial(
+        semijoin_probe, block_m=block_m, block_n=block_n, interpret=interpret
+    )
+    return jax.vmap(fn)(keys, probes)

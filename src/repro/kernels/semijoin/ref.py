@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the semijoin probe kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["semijoin_probe_ref"]
+
+
+def semijoin_probe_ref(keys: jax.Array, probes: jax.Array
+                       ) -> tuple[jax.Array, jax.Array]:
+    lo = jnp.searchsorted(keys, probes, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(keys, probes, side="right").astype(jnp.int32)
+    return lo, hi

@@ -1,0 +1,274 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# NOTE: the XLA_FLAGS lines above MUST precede every other import (jax locks
+# the device count at first initialization).  Docstring follows.
+DOC = """Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape x mesh) cell this driver:
+  1. builds the model + sharding specs,
+  2. ``jit(step).lower(...).compile()`` on the production mesh,
+  3. records memory_analysis, cost_analysis (FLOPs / bytes) and the
+     collective-transfer bytes parsed from the optimized HLO,
+  4. writes one JSON artifact per cell under artifacts/dryrun/.
+
+Run:  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+          [--multi-pod] [--adaptive] [--out artifacts/dryrun]
+
+Cells are skipped if their artifact already exists (resume-friendly).
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, applicable_shapes, ARCH_IDS, get_config
+from repro.models.model_zoo import build_model
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import batch_specs, cache_specs, named, param_specs
+from repro.launch.train import make_serve_step, make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in the optimized HLO."""
+    per_kind: dict[str, int] = {}
+    n_ops: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # result-side declaration lines look like:  %x = f32[...] all-reduce(...)
+        m = re.search(
+            r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)(?:-start)?",
+            stripped,
+        )
+        if not m:
+            continue
+        kind = m.group(1)
+        # bytes = size of the result shape(s) (proxy for wire traffic)
+        shapes = _SHAPE_RE.findall(stripped.split("(")[0])
+        total = 0
+        for dt, dims in shapes:
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        per_kind[kind] = per_kind.get(kind, 0) + total
+        n_ops[kind] = n_ops.get(kind, 0) + 1
+    return {"bytes_by_kind": per_kind, "ops_by_kind": n_ops,
+            "total_bytes": sum(per_kind.values())}
+
+
+def _override_depth(cfg, n: int):
+    """Reduced-depth config variants for the roofline's scan-body
+    extrapolation (benchmarks/roofline.py).  Families map differently:
+    hybrid counts groups-of-3 (+2 tail), audio shrinks encoder too."""
+    from dataclasses import replace
+
+    if cfg.family == "hybrid":
+        return replace(cfg, n_layers=3 * n + 2, scan_unroll=True)
+    if cfg.family == "audio":
+        from repro.models.common import EncDecConfig
+
+        return replace(
+            cfg, n_layers=n, scan_unroll=True,
+            encdec=EncDecConfig(n_enc_layers=n, n_frames=cfg.encdec.n_frames),
+        )
+    return replace(cfg, n_layers=n, scan_unroll=True)
+
+
+def _make_opts(cfg, mesh):
+    """The optimized (beyond-paper) configuration for this arch."""
+    from repro.models.moe import slot_map_for_plan
+    from repro.models.transformer import RuntimeOptions
+
+    ac = cfg.adaptive
+    hot = tuple(range(ac.embedding_hot_budget)) if ac else ()
+    slot_map = None
+    if cfg.moe is not None and ac and ac.expert_replication:
+        # plan placeholder: hottest experts = first R (the controller
+        # supplies the live plan during training; the dry-run measures the
+        # lowered cost of the plan's shape, which is id-independent)
+        slot_map = slot_map_for_plan(
+            cfg.moe.n_experts, tuple(range(ac.expert_replication))
+        )
+    return RuntimeOptions(
+        mesh=mesh,
+        sharded_moe=cfg.moe is not None,
+        adaptive_embedding=bool(ac and ac.embedding_hot_budget),
+        hot_ids=hot,
+        cold_frac=ac.embedding_cold_frac if ac else 1.0,
+        bf16_cache_math=True,
+        kv_cache_int8=True,
+        slot_map=slot_map,
+    )
+
+
+def run_cell(arch: str, shape_name: str, mesh, multi_pod: bool,
+             out_dir: Path, adaptive: bool = False,
+             depth_override: int | None = None,
+             optimized: bool = False) -> dict:
+    cfg = get_config(arch)
+    if depth_override is not None:
+        cfg = _override_depth(cfg, depth_override)
+    shape = SHAPES[shape_name]
+    if optimized:
+        from dataclasses import replace as _replace
+
+        cfg = _replace(cfg, remat_policy="dots")
+    opts = _make_opts(cfg, mesh) if optimized else None
+    model = build_model(cfg, opts=opts)
+    tag = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+    if adaptive:
+        tag += "__adaptive"
+    if depth_override is not None:
+        tag += f"__D{depth_override}"
+    if optimized:
+        tag += "__opt"
+    out_path = out_dir / f"{tag}.json"
+    if out_path.exists():
+        return json.loads(out_path.read_text())
+
+    t0 = time.perf_counter()
+    record: dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": dict(mesh.shape), "multi_pod": multi_pod,
+        "kind": shape.kind, "adaptive": adaptive, "optimized": optimized,
+        "model_params": cfg.param_count(),
+        "model_params_active": cfg.active_param_count(),
+    }
+    try:
+        pshapes = jax.eval_shape(model.init, jax.random.key(0))
+        pshard = named(mesh, param_specs(pshapes, mesh))
+        in_specs = model.input_specs(shape)
+        bshard = named(mesh, batch_specs(cfg, mesh, shape, shape.kind))
+
+        if shape.kind == "train":
+            from repro.optim.adamw import OptState
+
+            opt_shapes = jax.eval_shape(adamw_init, pshapes)
+            oshard = OptState(
+                step=named(mesh, jax.sharding.PartitionSpec()),
+                m=named(mesh, param_specs(opt_shapes.m, mesh)),
+                v=named(mesh, param_specs(opt_shapes.v, mesh)),
+            )
+            step = make_train_step(model, AdamWConfig())
+            jitted = jax.jit(
+                step,
+                in_shardings=(pshard, oshard, bshard),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(pshapes, opt_shapes, in_specs)
+        elif shape.kind == "prefill":
+            # inference-prefill: forward only (loss as the summary output)
+            jitted = jax.jit(model.loss, in_shardings=(pshard, bshard))
+            lowered = jitted.lower(pshapes, in_specs)
+        else:
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len)
+            )
+            cshard = named(
+                mesh, cache_specs(cache_shapes, cfg, mesh, shape.global_batch)
+            )
+            step = make_serve_step(model)
+            jitted = jax.jit(
+                step,
+                in_shardings=(pshard, cshard, bshard),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(pshapes, cache_shapes, in_specs)
+
+        record["lower_s"] = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        record["compile_s"] = time.perf_counter() - t1
+
+        mem = compiled.memory_analysis()
+        record["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None
+            ),
+        }
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        record["cost"] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "transcendentals": float(cost.get("transcendentals", 0.0)),
+        }
+        hlo = compiled.as_text()
+        record["collectives"] = collective_bytes(hlo)
+        record["hlo_lines"] = hlo.count("\n")
+        record["ok"] = True
+    except Exception as e:  # record failures — they are bugs to fix
+        record["ok"] = False
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+    record["total_s"] = time.perf_counter() - t0
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(record, indent=1))
+    status = "ok" if record.get("ok") else "FAIL"
+    print(f"[{status}] {tag}  ({record['total_s']:.1f}s)", flush=True)
+    return record
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--optimized", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args(argv)
+
+    out_dir = Path(args.out)
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_fail = 0
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        for arch in archs:
+            shapes = [args.shape] if args.shape else applicable_shapes(arch)
+            for shape_name in shapes:
+                rec = run_cell(arch, shape_name, mesh, multi_pod, out_dir,
+                               optimized=args.optimized)
+                n_fail += 0 if rec.get("ok") else 1
+    print(f"dry-run complete; failures: {n_fail}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,207 @@
+"""Sharding rules: parameter, optimizer, batch and cache PartitionSpecs.
+
+Rules are name/path based over the parameter pytree (DESIGN §6):
+
+  vocab tables      ('model', None)        row (vocab) sharded
+  LM head           (None, 'model')
+  QKV / FFN-in      (None, 'model')        TP column-parallel
+  attn-out / FFN-out('model', None)        TP row-parallel
+  MoE expert stacks ('model', None, None)  EP over experts
+  SSM mixers        replicated             (130M params; DP-only — DESIGN §5)
+  norms / scalars   replicated
+
+Stacked-layer leading axes (scan) are never sharded.  Divisibility is not
+required — GSPMD pads uneven dimensions (e.g. 60 experts over 16 shards).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+from .mesh import batch_axes
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "named", "Stats"]
+
+# parameter-name -> spec for the *trailing* dims (leading dims replicated)
+_LAST2 = {
+    "table": ("model", None),
+    "tok": ("model", None),
+    "out": (None, "model"),
+    "wq": (None, "model"),
+    "wk": (None, "model"),
+    "wv": (None, "model"),
+    "w1": (None, "model"),
+    "w3": (None, "model"),
+    "w_y": (None, "model"),
+    "w_x": (None, "model"),
+    "w_i": (None, "model"),
+    "w_r": (None, "model"),
+    "in_proj": (None, "model"),
+    "wo": ("model", None),
+    "w2": ("model", None),
+    "w_o": ("model", None),
+    "out_proj": ("model", None),
+    "conv": (None, "model"),
+}
+_BIAS_MODEL = {"bq", "bk", "bv", "lam", "norm_g"}
+_REPLICATED = {"router", "enc_pos", "dec_pos", "projector"}
+_MOE3 = {"w1", "w3", "w2"}  # under a 'moe' path: (E, D, F) expert stacks
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+    return out
+
+
+def _fits(tail: tuple, shape: tuple, sizes: dict) -> bool:
+    """Argument shardings require divisibility (GSPMD pads only internals)."""
+    off = len(shape) - len(tail)
+    for i, ax in enumerate(tail):
+        if ax is None:
+            continue
+        if shape[off + i] % sizes.get(ax, 1) != 0:
+            return False
+    return True
+
+
+def _spec_for(path, leaf, sizes: dict) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    nd = leaf.ndim
+    shape = tuple(leaf.shape)
+    in_moe = "moe" in names
+    in_ssm = "ssm" in names
+
+    def fit(*cands):
+        for tail in cands:
+            if len(tail) <= nd and _fits(tail, shape, sizes):
+                return P(*([None] * (nd - len(tail)) + list(tail)))
+        return P(*([None] * nd))
+
+    if in_ssm:  # SSM mixers replicated (DP-only family, DESIGN §6)
+        return P(*([None] * nd))
+    if name in _REPLICATED or any(n in _REPLICATED for n in names):
+        return P(*([None] * nd))
+    if in_moe and name in _MOE3 and nd >= 3:
+        # EP over experts; fall back to TP inside experts if E not divisible
+        if name == "w2":  # (E, F, D)
+            return fit(("model", None, None), (None, "model", None))
+        return fit(("model", None, None), (None, None, "model"))
+    if name in _LAST2 and nd >= 2:
+        return fit(_LAST2[name])
+    if name in _BIAS_MODEL and nd >= 1:
+        return fit(("model",))
+    return P(*([None] * nd))
+
+
+def param_specs(params_shape: Any, mesh=None) -> Any:
+    """PartitionSpec pytree matching a params (or ShapeDtypeStruct) pytree.
+
+    ``mesh`` enables divisibility-aware fallbacks; without it, rules assume
+    divisibility (used only in unit tests on tiny configs).
+    """
+    sizes = dict(mesh.shape) if mesh is not None else {}
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _spec_for(p, l, sizes), params_shape
+    )
+
+
+def batch_specs(cfg: ModelConfig, mesh, shape, kind: str) -> dict:
+    """Input PartitionSpecs for one (arch, shape) cell."""
+    dp = batch_axes(mesh, shape.global_batch)
+    bspec = dp if len(dp) != 1 else dp[0]
+    if kind in ("train", "prefill"):
+        out = {"tokens": P(bspec, None), "labels": P(bspec, None)}
+        if cfg.family == "vlm":
+            out["patches"] = P(bspec, None, None)
+        if cfg.family == "audio":
+            out["frames"] = P(bspec, None, None)
+        return out
+    out = {"tokens": P(bspec, None), "pos": P()}
+    if cfg.family == "audio":
+        out["enc"] = P(bspec, None, None)
+    return out
+
+
+def _cache_leaf_spec(path, leaf, cfg: ModelConfig, mesh, global_batch: int) -> P:
+    """KV caches: (L, B, T, KV, hd) — batch on data axes; the long sequence
+    axis on 'model' (sequence parallelism) when KV heads don't cover the
+    model axis; SSM/recurrent states: batch-sharded only."""
+    names = _path_names(path)
+    nd = leaf.ndim
+    dp = batch_axes(mesh, global_batch)
+    bspec = dp if len(dp) != 1 else (dp[0] if dp else None)
+    m = mesh.shape.get("model", 1)
+    if names and names[-1] in ("k_scale", "v_scale"):
+        # (L, B, T, KV) or (B, T, KV) quantization scales: follow the cache
+        t_ax = nd - 2
+        t = leaf.shape[t_ax]
+        spec = [None] * nd
+        spec[nd - 3] = bspec
+        if t % m == 0:
+            spec[t_ax] = "model"
+        return P(*spec)
+    if names and names[0] in ("kv", "attn") or (names and names[-1] in ("k", "v")):
+        if nd == 5:  # (L, B, T, KV, hd)
+            kvh = leaf.shape[3]
+            t = leaf.shape[2]
+            if kvh % m == 0 and kvh >= m:
+                return P(None, bspec, None, "model", None)
+            if t % m == 0:
+                return P(None, bspec, "model", None, None)  # SP on cache
+            return P(None, bspec, None, None, None)
+        if nd == 4:  # (B, T, KV, hd) unstacked
+            kvh = leaf.shape[2]
+            t = leaf.shape[1]
+            if kvh % m == 0 and kvh >= m:
+                return P(bspec, None, "model", None)
+            if t % m == 0:
+                return P(bspec, "model", None, None)
+            return P(bspec, None, None, None)
+    # recurrent / conv states: shard whichever leading dim is the batch
+    # (stacked states carry a layer dim first, tail states do not)
+    for i in range(min(nd, 2)):
+        if shape_i(leaf, i) == global_batch:
+            return P(*([None] * i + [bspec] + [None] * (nd - i - 1)))
+    return P(*([None] * nd))
+
+
+def shape_i(leaf, i: int) -> int:
+    return int(leaf.shape[i])
+
+
+def cache_specs(cache_shape: Any, cfg: ModelConfig, mesh, global_batch: int
+                ) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _cache_leaf_spec(p, l, cfg, mesh, global_batch),
+        cache_shape,
+    )
+
+
+def named(mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+class Stats:
+    """Small helper: parameter/bytes accounting for reports."""
+
+    @staticmethod
+    def bytes_of(tree: Any) -> int:
+        return sum(
+            int(np.prod(x.shape)) * x.dtype.itemsize
+            for x in jax.tree.leaves(tree)
+        )

@@ -1,0 +1,318 @@
+"""GQA attention: blocked-causal (flash-structured) training path, windowed
+local attention (hybrid archs), and single-token decode against a KV cache.
+
+The training path is written as an online-softmax over KV blocks — the same
+algorithm the Pallas kernel (repro.kernels.flash_attention) implements for
+TPU; this jnp version is its oracle and the path actually lowered in the
+dry-run (Pallas interpret mode is CPU-only and would bloat the HLO).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, apply_rope, dense_init, rope_tables
+
+__all__ = [
+    "init_attention",
+    "attention",
+    "decode_attention",
+    "init_kv_cache",
+]
+
+NEG_INF = -1e30
+
+
+def init_attention(key: jax.Array, cfg: ModelConfig, kv_heads: int | None = None
+                   ) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    nh = cfg.n_heads
+    nkv = kv_heads if kv_heads is not None else cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, nh * hd), cfg.pdtype),
+        "wk": dense_init(ks[1], (d, nkv * hd), cfg.pdtype),
+        "wv": dense_init(ks[2], (d, nkv * hd), cfg.pdtype),
+        "wo": dense_init(ks[3], (nh * hd, d), cfg.pdtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nh * hd,), cfg.pdtype)
+        p["bk"] = jnp.zeros((nkv * hd,), cfg.pdtype)
+        p["bv"] = jnp.zeros((nkv * hd,), cfg.pdtype)
+    return p
+
+
+def _project_qkv(p: dict, x: jax.Array, cfg: ModelConfig, nkv: int):
+    b, t, d = x.shape
+    hd = cfg.hd
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, t, cfg.n_heads, hd)
+    k = k.reshape(b, t, nkv, hd)
+    v = v.reshape(b, t, nkv, hd)
+    return q, k, v
+
+
+def _blocked_attn(
+    q: jax.Array,  # (B, T, H, hd)  RoPE already applied
+    k: jax.Array,  # (B, S, KV, hd)
+    v: jax.Array,  # (B, S, KV, hd)
+    causal: bool,
+    window: int,  # 0 = global; else local (each q sees last `window` keys)
+    q_block: int,
+    kv_block: int,
+    q_offset: int = 0,  # absolute position of q[0] (cross/cached attention)
+) -> jax.Array:
+    """Online-softmax attention over KV blocks; memory O(q_block * kv_block)."""
+    b, t, h, hd = q.shape
+    s = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh  # GQA group size
+    scale = hd ** -0.5
+
+    qb = min(q_block, t)
+    nq = -(-t // qb)
+    t_pad = nq * qb
+    kb = min(kv_block, s)
+    nk = -(-s // kb)
+    s_pad = nk * kb
+
+    qp = jnp.pad(q, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    # (B, nq, qb, KV, g, hd) grouped query blocks
+    qp = qp.reshape(b, nq, qb, kvh, g, hd)
+    kp = kp.reshape(b, nk, kb, kvh, hd)
+    vp = vp.reshape(b, nk, kb, kvh, hd)
+
+    q_pos = q_offset + jnp.arange(t_pad).reshape(nq, qb)
+    k_pos = jnp.arange(s_pad).reshape(nk, kb)
+
+    def per_q_block(qi, qblk):
+        # qblk: (B, qb, KV, g, hd)
+        acc0 = jnp.zeros((b, qb, kvh, g, hd), jnp.float32)
+        m0 = jnp.full((b, qb, kvh, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, qb, kvh, g), jnp.float32)
+
+        def per_kv_block(carry, kj):
+            acc, m, l = carry
+            kblk = kp[:, kj]  # (B, kb, KV, hd)
+            vblk = vp[:, kj]
+            logits = jnp.einsum(
+                "bqkgd,bskd->bqkgs", qblk.astype(jnp.float32),
+                kblk.astype(jnp.float32),
+            ) * scale
+            qpos = q_pos[qi][None, :, None, None, None]
+            kpos = k_pos[kj][None, None, None, None, :]
+            mask = kpos < s  # never attend to padding keys
+            if causal:
+                mask = mask & (kpos <= qpos)
+            if window > 0:
+                mask = mask & (kpos > qpos - window)
+            logits = jnp.where(mask, logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bqkgs,bskd->bqkgd", p, vblk.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        (acc, m, l), _ = jax.lax.scan(
+            per_kv_block, (acc0, m0, l0), jnp.arange(nk)
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.astype(q.dtype)
+
+    out = jax.lax.map(
+        lambda qi: per_q_block(qi, qp[:, qi]), jnp.arange(nq)
+    )  # (nq, B, qb, KV, g, hd)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, t_pad, kvh * g, hd)
+    return out[:, :t]
+
+
+def attention(
+    p: dict,
+    x: jax.Array,  # (B, T, D)
+    cfg: ModelConfig,
+    positions: jax.Array | None = None,  # (T,) absolute positions
+    *,
+    causal: bool = True,
+    window: int = 0,
+    kv_heads: int | None = None,
+    use_rope: bool = True,
+    q_block: int = 512,
+    kv_block: int = 1024,
+) -> jax.Array:
+    """Full (or windowed) self-attention for train/prefill.
+
+    Block sizes trade the logits-tile footprint against scan-carry traffic
+    of the online-softmax accumulators; 512/1024 measured best on the HLO
+    byte metric (1024/2048 was tried and REFUTED — §Perf iteration 3).
+    """
+    nkv = kv_heads if kv_heads is not None else cfg.n_kv_heads
+    b, t, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, nkv)
+    if use_rope:
+        if positions is None:
+            positions = jnp.arange(t)
+        cos, sin = rope_tables(positions, cfg.hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    o = _blocked_attn(q, k, v, causal, window, q_block, kv_block)
+    return o.reshape(b, t, -1) @ p["wo"].astype(x.dtype)
+
+
+def cross_attention(
+    p: dict,
+    x: jax.Array,  # (B, T, D) decoder states
+    kv: jax.Array,  # (B, S, D) encoder states
+    cfg: ModelConfig,
+    kv_heads: int | None = None,
+    q_block: int = 512,
+    kv_block: int = 1024,
+) -> jax.Array:
+    nkv = kv_heads if kv_heads is not None else cfg.n_kv_heads
+    b, t, _ = x.shape
+    s = kv.shape[1]
+    hd = cfg.hd
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, t, cfg.n_heads, hd)
+    k = (kv @ p["wk"].astype(x.dtype)).reshape(b, s, nkv, hd)
+    v = (kv @ p["wv"].astype(x.dtype)).reshape(b, s, nkv, hd)
+    o = _blocked_attn(q, k, v, causal=False, window=0, q_block=q_block,
+                      kv_block=kv_block)
+    return o.reshape(b, t, -1) @ p["wo"].astype(x.dtype)
+
+
+# ------------------------------------------------------------------- decode
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  kv_heads: int | None = None, dtype=None,
+                  int8: bool = False) -> dict:
+    nkv = kv_heads if kv_heads is not None else cfg.n_kv_heads
+    dt = dtype or cfg.cdtype
+    shape = (batch, max_len, nkv, cfg.hd)
+    if int8:
+        # quantized cache: s8 payload + per-(position, head) f32 scales —
+        # halves decode HBM traffic (EXPERIMENTS.md §Perf, llama3 decode)
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:3], jnp.float32),
+            "v_scale": jnp.zeros(shape[:3], jnp.float32),
+        }
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def _quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(B, 1, KV, hd) -> (s8 payload, f32 per-head scale)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def decode_attention(
+    p: dict,
+    x: jax.Array,  # (B, 1, D) current-token hidden state
+    cache: dict,  # {"k","v"}: (B, L, KV, hd)
+    pos: jax.Array,  # scalar int32 — index of the current token
+    cfg: ModelConfig,
+    *,
+    window: int = 0,
+    kv_heads: int | None = None,
+    use_rope: bool = True,
+    f32_cache_math: bool = True,
+) -> tuple[jax.Array, dict]:
+    """One decode step: append K/V at ``pos``, attend to the full cache.
+
+    The cache keeps static shape (B, L, KV, hd); positions > pos are masked.
+    For windowed attention the cache is a ring buffer of size `window`.
+
+    ``f32_cache_math=False`` keeps the cache dot in bf16 with f32
+    accumulation (preferred_element_type) instead of materializing an f32
+    copy of the cache — halves decode HBM traffic (EXPERIMENTS.md §Perf).
+    """
+    nkv = kv_heads if kv_heads is not None else cfg.n_kv_heads
+    b = x.shape[0]
+    hd = cfg.hd
+    q, k, v = _project_qkv(p, x, cfg, nkv)  # (B, 1, H/KV, hd)
+    if use_rope:
+        cos, sin = rope_tables(pos[None], cfg.hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    L = cache["k"].shape[1]
+    slot = pos % L if window > 0 else pos  # ring buffer for local attention
+    int8 = "k_scale" in cache
+    if int8:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=1)
+        cks = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, slot,
+                                                  axis=1)
+        cvs = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, slot,
+                                                  axis=1)
+        g = cfg.n_heads // nkv
+        qg = q.reshape(b, nkv, g, hd).astype(jnp.float32)
+        # dequantize-on-read: scales factor out of the hd contraction
+        raw = jnp.einsum(
+            "bkgd,blkd->bkgl", qg, ck.astype(jnp.float32)
+        )
+        logits = raw * cks.transpose(0, 2, 1)[:, :, None, :] * (hd ** -0.5)
+        idx = jnp.arange(L)
+        if window > 0:
+            age = pos - ((idx - slot - 1) % L + 1)
+            mask = (age >= 0) & (age < window) & (age < pos + 1)
+            mask = mask | (idx == slot)
+        else:
+            mask = idx <= pos
+        logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        wv = w * cvs.transpose(0, 2, 1)[:, :, None, :]
+        o = jnp.einsum("bkgl,blkd->bkgd", wv, cv.astype(jnp.float32))
+        o = o.reshape(b, 1, cfg.n_heads * hd).astype(x.dtype)
+        new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+        return o @ p["wo"].astype(x.dtype), new_cache
+
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+
+    g = cfg.n_heads // nkv
+    if f32_cache_math:
+        qg = q.reshape(b, nkv, g, hd).astype(jnp.float32)
+        kf = ck.astype(jnp.float32)
+        logits = jnp.einsum("bkgd,blkd->bkgl", qg, kf) * (hd ** -0.5)
+    else:
+        qg = q.reshape(b, nkv, g, hd)
+        logits = jnp.einsum(
+            "bkgd,blkd->bkgl", qg, ck,
+            preferred_element_type=jnp.float32,
+        ) * (hd ** -0.5)
+    idx = jnp.arange(L)
+    if window > 0:
+        age = pos - ((idx - slot - 1) % L + 1)  # distance, ring layout
+        mask = (age >= 0) & (age < window) & (age < pos + 1)
+        mask = mask | (idx == slot)
+    else:
+        mask = idx <= pos
+    logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    if f32_cache_math:
+        o = jnp.einsum("bkgl,blkd->bkgd", w, cv.astype(jnp.float32))
+    else:
+        o = jnp.einsum(
+            "bkgl,blkd->bkgd", w.astype(cv.dtype), cv,
+            preferred_element_type=jnp.float32,
+        )
+    o = o.reshape(b, 1, cfg.n_heads * hd).astype(x.dtype)
+    return o @ p["wo"].astype(x.dtype), {"k": ck, "v": cv}

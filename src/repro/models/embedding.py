@@ -1,0 +1,141 @@
+"""Vocab-sharded embedding with AdHash-style adaptive hot-row replication.
+
+Baseline (paper-faithful "initial partitioning" analogue): the table is
+row-sharded over the ``model`` axis; a plain gather lowers (under GSPMD) to
+masked local gathers + an all-reduce of the (tokens, d_model) activations —
+every lookup pays the collective.
+
+Adaptive path (the paper's IRD applied to embeddings, DESIGN §2b): the hot
+rows chosen by the AdaptiveShardingController are replicated to every device
+(one small all-gather, amortized — the replica index), so hot tokens resolve
+locally; only cold tokens flow through a fixed-capacity all-gather exchange
+sized by the measured coverage (static shape -> the collective-bytes saving
+is visible in the compiled HLO).  Overflow is reported and handled by the
+host with capacity doubling — the same discipline as the RDF executor.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import ModelConfig, dense_init
+
+__all__ = [
+    "init_embedding",
+    "embed",
+    "adaptive_embed",
+    "lm_head",
+]
+
+
+def init_embedding(key: jax.Array, cfg: ModelConfig) -> dict:
+    p = {"table": dense_init(key, (cfg.vocab_size, cfg.d_model), cfg.pdtype,
+                             scale=1.0)}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["out"] = dense_init(k2, (cfg.d_model, cfg.vocab_size), cfg.pdtype)
+    return p
+
+
+def embed(p: dict, ids: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Baseline lookup: gather on the vocab-sharded table."""
+    return jnp.take(p["table"], ids, axis=0).astype(cfg.cdtype)
+
+
+def lm_head(p: dict, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """(B, T, D) -> (B, T, V) logits; V stays sharded on `model`."""
+    if cfg.tie_embeddings:
+        return h @ p["table"].T.astype(h.dtype)
+    return h @ p["out"].astype(h.dtype)
+
+
+# --------------------------------------------------------------- adaptive IRD
+def adaptive_embed(
+    p: dict,
+    ids: jax.Array,  # (B, T) int32, replicated over `model`
+    cfg: ModelConfig,
+    hot_ids: tuple[int, ...],  # static replication plan (sorted)
+    cold_cap: int,  # static per-shard cold-exchange capacity
+    mesh: jax.sharding.Mesh,
+    axis: str = "model",
+) -> tuple[jax.Array, jax.Array]:
+    """Hot-replicated + cold-exchanged lookup.  Returns (emb, overflow).
+
+    overflow > 0 means some cold tokens exceeded ``cold_cap`` on a shard (the
+    host reacts by doubling the capacity and re-jitting, or replanning).
+    """
+    v, d = p["table"].shape
+    m = mesh.shape[axis]
+    v_local = v // m
+    b, t = ids.shape
+    n = b * t
+    n_hot = len(hot_ids)
+    hot_arr = jnp.asarray(hot_ids, jnp.int32) if n_hot else None
+
+    # replica index: gather hot rows once (small collective, amortized)
+    hot_tbl = (
+        jnp.take(p["table"], hot_arr, axis=0).astype(cfg.cdtype)
+        if n_hot
+        else jnp.zeros((1, d), cfg.cdtype)
+    )
+
+    data_axes = tuple(a for a in mesh.axis_names if a != axis)
+    all_axes = tuple(mesh.axis_names)
+
+    def inner(tbl_l: jax.Array, ids_l: jax.Array, hot_l: jax.Array):
+        rank = jax.lax.axis_index(axis)
+        bl, tl = ids_l.shape
+        flat = ids_l.reshape(-1)
+        nl = flat.shape[0]
+
+        # ---- hot path: local lookup in the replica table
+        if n_hot:
+            pos = jnp.clip(
+                jnp.searchsorted(hot_arr, flat), 0, n_hot - 1
+            ).astype(jnp.int32)
+            is_hot = hot_arr[pos] == flat
+            hot_out = hot_l[pos] * is_hot[:, None].astype(hot_l.dtype)
+        else:
+            is_hot = jnp.zeros((nl,), bool)
+            hot_out = jnp.zeros((nl, d), cfg.cdtype)
+
+        # ---- cold path: each shard serves the cold rows it owns
+        owner = (flat // v_local).astype(jnp.int32)
+        mine = (owner == rank) & ~is_hot
+        # compact owned token positions to the static capacity
+        prio = jnp.where(mine, jnp.arange(nl, dtype=jnp.int32), nl)
+        tokpos = jnp.sort(prio)[:cold_cap]  # nl = invalid sentinel
+        valid = tokpos < nl
+        safe_tok = jnp.minimum(tokpos, nl - 1)
+        local_row = jnp.clip(flat[safe_tok] - rank * v_local, 0, v_local - 1)
+        rows = tbl_l[local_row].astype(cfg.cdtype)
+        rows = rows * valid[:, None].astype(rows.dtype)
+        over = jnp.maximum(jnp.sum(mine) - cold_cap, 0)
+
+        # exchange: every shard needs every cold row (activations are
+        # replicated over `model` for the TP matmuls that follow)
+        all_rows = jax.lax.all_gather(rows, axis)  # (M, cold_cap, D)
+        all_pos = jax.lax.all_gather(tokpos, axis)  # (M, cold_cap)
+        dest = jnp.where(
+            all_pos.reshape(-1) < nl, all_pos.reshape(-1), nl
+        ).astype(jnp.int32)
+        cold_out = jnp.zeros((nl + 1, d), cfg.cdtype)
+        cold_out = cold_out.at[dest].add(
+            all_rows.reshape(-1, d), mode="drop"
+        )[:nl]
+        out = (hot_out + cold_out).reshape(bl, tl, d)
+        return out, jax.lax.psum(over, all_axes)
+
+    data_spec = (data_axes if len(data_axes) > 1 else
+                 (data_axes[0] if data_axes else None))
+    out, overflow = jax.shard_map(
+        inner,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(data_spec, None), P(None, None)),
+        out_specs=(P(data_spec, None, None), P()),
+        check_vma=False,
+    )(p["table"], ids, hot_tbl)
+    return out, overflow

@@ -1,0 +1,44 @@
+"""Gated MLPs (SwiGLU family) and plain GeLU MLP (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init
+
+__all__ = ["init_swiglu", "swiglu", "init_gelu_mlp", "gelu_mlp"]
+
+
+def init_swiglu(key: jax.Array, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(k1, (d, f), cfg.pdtype),  # gate
+        "w3": dense_init(k2, (d, f), cfg.pdtype),  # up
+        "w2": dense_init(k3, (f, d), cfg.pdtype),  # down
+    }
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(x @ p["w1"].astype(x.dtype))
+    u = x @ p["w3"].astype(x.dtype)
+    return (g * u) @ p["w2"].astype(x.dtype)
+
+
+def init_gelu_mlp(key: jax.Array, cfg: ModelConfig, d_ff: int | None = None
+                  ) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "w1": dense_init(k1, (d, f), cfg.pdtype),
+        "b1": jnp.zeros((f,), cfg.pdtype),
+        "w2": dense_init(k2, (f, d), cfg.pdtype),
+        "b2": jnp.zeros((d,), cfg.pdtype),
+    }
+
+
+def gelu_mlp(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ p["w1"].astype(x.dtype) + p["b1"].astype(x.dtype))
+    return h @ p["w2"].astype(x.dtype) + p["b2"].astype(x.dtype)

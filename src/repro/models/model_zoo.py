@@ -1,0 +1,146 @@
+"""Uniform model API over all assigned architectures.
+
+Each arch exposes:
+  init(key)                      -> params
+  loss(params, batch)            -> scalar CE loss (train/prefill lowering)
+  init_cache(batch, max_len)     -> decode cache (zeros or SDS via eval_shape)
+  decode(params, cache, batch)   -> (logits, new cache)   (serve lowering)
+  input_specs(shape)             -> {name: ShapeDtypeStruct} for the dry-run
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models import vlm as vlmm
+from repro.models import whisper as whm
+from repro.models.common import ModelConfig
+
+__all__ = ["ModelAPI", "build_model"]
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclass
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    loss: Callable[[Any, dict], jax.Array]
+    init_cache: Callable[[int, int], Any]
+    decode: Callable[[Any, Any, dict], tuple[jax.Array, Any]]
+    input_specs: Callable[[Any], dict]
+
+    def param_specs(self, key=None) -> Any:
+        """Parameter ShapeDtypeStructs without allocation."""
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+
+def _text_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.family == "vlm":
+        return max(seq_len - cfg.vlm.n_patches, 8)
+    return seq_len
+
+
+def build_model(cfg: ModelConfig, opts=None) -> ModelAPI:
+    """``opts``: optional transformer.RuntimeOptions — the beyond-paper
+    optimization switches (sharded MoE, adaptive embedding, bf16 cache math).
+    None reproduces the paper-faithful baseline."""
+    fam = cfg.family
+
+    # ---------------------------------------------------------------- audio
+    if fam == "audio":
+        def init(key):
+            return whm.init_whisper(key, cfg, max_dec_len=65536)
+
+        def loss(params, batch):
+            return whm.whisper_loss(
+                params, batch["frames"], batch["tokens"], batch["labels"], cfg
+            )
+
+        def init_cache(b, max_len):
+            return whm.init_whisper_cache(cfg, b, max_len)
+
+        def decode(params, cache, batch):
+            return whm.whisper_decode_step(
+                params, cache, batch["enc"], batch["tokens"], batch["pos"], cfg
+            )
+
+        def input_specs(shape):
+            b, t = shape.global_batch, shape.seq_len
+            f = cfg.encdec.n_frames
+            if shape.kind in ("train", "prefill"):
+                return {
+                    "frames": SDS((b, f, cfg.d_model), jnp.float32),
+                    "tokens": SDS((b, t), jnp.int32),
+                    "labels": SDS((b, t), jnp.int32),
+                }
+            return {
+                "enc": SDS((b, f, cfg.d_model), cfg.cdtype),
+                "tokens": SDS((b, 1), jnp.int32),
+                "pos": SDS((), jnp.int32),
+            }
+
+        return ModelAPI(cfg, init, loss, init_cache, decode, input_specs)
+
+    # ------------------------------------------------------------------ vlm
+    if fam == "vlm":
+        def init(key):
+            return vlmm.init_vlm(key, cfg)
+
+        def loss(params, batch):
+            return vlmm.vlm_loss(
+                params, batch["patches"], batch["tokens"], batch["labels"], cfg
+            )
+
+        def init_cache(b, max_len):
+            return vlmm.init_vlm_cache(cfg, b, max_len)
+
+        def decode(params, cache, batch):
+            return vlmm.vlm_decode_step(
+                params, cache, batch["tokens"], batch["pos"], cfg
+            )
+
+        def input_specs(shape):
+            b = shape.global_batch
+            t = _text_len(cfg, shape.seq_len)
+            np_, dv = cfg.vlm.n_patches, cfg.vlm.d_vision
+            if shape.kind in ("train", "prefill"):
+                return {
+                    "patches": SDS((b, np_, dv), jnp.float32),
+                    "tokens": SDS((b, t), jnp.int32),
+                    "labels": SDS((b, t), jnp.int32),
+                }
+            return {"tokens": SDS((b, 1), jnp.int32), "pos": SDS((), jnp.int32)}
+
+        return ModelAPI(cfg, init, loss, init_cache, decode, input_specs)
+
+    # ------------------------------------------------- decoder-only families
+    def init(key):
+        return tfm.init_lm(key, cfg)
+
+    def loss(params, batch):
+        return tfm.lm_loss(params, batch["tokens"], batch["labels"], cfg,
+                           opts=opts)
+
+    def init_cache(b, max_len):
+        return tfm.init_lm_cache(cfg, b, max_len, opts=opts)
+
+    def decode(params, cache, batch):
+        return tfm.lm_decode_step(
+            params, cache, batch["tokens"], batch["pos"], cfg, opts=opts
+        )
+
+    def input_specs(shape):
+        b, t = shape.global_batch, shape.seq_len
+        if shape.kind in ("train", "prefill"):
+            return {
+                "tokens": SDS((b, t), jnp.int32),
+                "labels": SDS((b, t), jnp.int32),
+            }
+        return {"tokens": SDS((b, 1), jnp.int32), "pos": SDS((), jnp.int32)}
+
+    return ModelAPI(cfg, init, loss, init_cache, decode, input_specs)

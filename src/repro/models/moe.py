@@ -1,0 +1,137 @@
+"""Mixture-of-Experts FFN: shared + routed top-k experts, capacity-based
+sort dispatch, expert parallelism over the ``model`` axis, and AdHash-style
+hot-expert replication (DESIGN §2b).
+
+Dispatch is the static-shape sort/compaction pattern (same primitive family
+as the RDF engine's bucket_by_dest): assignments are sorted by expert slot,
+each slot takes a contiguous chunk up to its capacity, surplus tokens are
+dropped (counted and reported — the MoE analogue of the executor's overflow
+accounting; the trainer can raise the capacity factor or replan).
+
+Hot-expert replication: the controller's plan maps E logical experts onto
+E + R slots; replicas of hot experts split their token load (by dispatch
+index parity), so per-slot peak load drops and the capacity factor — and
+with it the all_to_all dispatch bytes — can shrink.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, MoEConfig, dense_init
+from .mlp import init_swiglu, swiglu
+
+__all__ = ["init_moe", "moe_ffn", "slot_map_for_plan"]
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig) -> dict:
+    mc = cfg.moe
+    assert mc is not None
+    d = cfg.d_model
+    de = mc.d_expert or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, mc.n_experts), cfg.pdtype),
+        "w1": dense_init(ks[1], (mc.n_experts, d, de), cfg.pdtype),
+        "w3": dense_init(ks[2], (mc.n_experts, d, de), cfg.pdtype),
+        "w2": dense_init(ks[3], (mc.n_experts, de, d), cfg.pdtype),
+    }
+    if mc.n_shared:
+        # shared experts fused into one dense SwiGLU of width n_shared * de
+        p["shared"] = init_swiglu(ks[4], cfg, d_ff=mc.n_shared * de)
+    return p
+
+
+def slot_map_for_plan(n_experts: int, hot_experts: tuple[int, ...]
+                      ) -> tuple[int, ...]:
+    """Static slot -> logical-expert map: E primary slots + one replica slot
+    per hot expert (the LM 'replica index')."""
+    return tuple(range(n_experts)) + tuple(hot_experts)
+
+
+def moe_ffn(
+    p: dict,
+    x: jax.Array,  # (B, T, D)
+    cfg: ModelConfig,
+    slot_map: tuple[int, ...] | None = None,  # replication plan (static)
+) -> tuple[jax.Array, dict]:
+    """Returns (out (B,T,D), diagnostics {dropped, expert_load})."""
+    mc = cfg.moe
+    assert mc is not None
+    b, t, d = x.shape
+    n = b * t
+    e = mc.n_experts
+    k = mc.top_k
+    slots = tuple(slot_map) if slot_map is not None else tuple(range(e))
+    s = len(slots)
+    slot_arr = jnp.asarray(slots, jnp.int32)
+    n_replicas_of = np.bincount(np.asarray(slots), minlength=e)  # static
+
+    xf = x.reshape(n, d)
+    logits = (xf @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(gates, k)  # (N, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # ------- map logical experts to slots; replicas split load by parity
+    flat_e = top_e.reshape(-1).astype(jnp.int32)  # (N*k,)
+    flat_t = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    flat_w = top_w.reshape(-1)
+    if s > e:
+        # replica slot of each hot expert (static lookup table)
+        rep_slot = np.full(e, -1, np.int32)
+        for si in range(e, s):
+            rep_slot[slots[si]] = si
+        rep_arr = jnp.asarray(rep_slot)
+        has_rep = rep_arr[flat_e] >= 0
+        use_rep = has_rep & (flat_t % 2 == 1)
+        flat_slot = jnp.where(use_rep, rep_arr[flat_e], flat_e)
+    else:
+        flat_slot = flat_e
+
+    # ------- capacity-based compaction (sorted dispatch)
+    cap = int(np.ceil(n * k / s * mc.capacity_factor / 8.0) * 8)
+    cap = max(cap, 8)
+    order = jnp.argsort(flat_slot, stable=True)
+    se = flat_slot[order]
+    st_ = flat_t[order]
+    sw = flat_w[order]
+    starts = jnp.searchsorted(se, jnp.arange(s, dtype=se.dtype))
+    ends = jnp.searchsorted(se, jnp.arange(1, s + 1, dtype=se.dtype))
+    idx = starts[:, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
+    valid = idx < ends[:, None]  # (S, cap)
+    idx_c = jnp.minimum(idx, n * k - 1)
+    tok = st_[idx_c]  # (S, cap) token index per slot row
+    wgt = jnp.where(valid, sw[idx_c], 0.0)
+
+    # ------- expert computation (einsum over stacked expert weights)
+    w1 = p["w1"][slot_arr].astype(x.dtype)  # (S, D, F)
+    w3 = p["w3"][slot_arr].astype(x.dtype)
+    w2 = p["w2"][slot_arr].astype(x.dtype)
+    xe = xf[tok] * valid[..., None].astype(x.dtype)  # (S, cap, D)
+    h = jax.nn.silu(jnp.einsum("scd,sdf->scf", xe, w1)) * jnp.einsum(
+        "scd,sdf->scf", xe, w3
+    )
+    ye = jnp.einsum("scf,sfd->scd", h, w2)  # (S, cap, D)
+
+    # ------- combine (scatter-add weighted expert outputs)
+    contrib = ye * wgt[..., None].astype(ye.dtype)
+    dest = jnp.where(valid, tok, n).reshape(-1)
+    out = jnp.zeros((n + 1, d), x.dtype)
+    out = out.at[dest].add(contrib.reshape(-1, d), mode="drop")[:n]
+
+    if mc.n_shared:
+        out = out + swiglu(p["shared"], xf)
+
+    diag = {
+        "dropped": jnp.sum(
+            jnp.maximum(ends - starts - cap, 0)
+        ),
+        "expert_load": jnp.minimum(ends - starts, cap),
+        # router aux statistics for the adaptive controller's heat map
+        "route_counts": jnp.sum(
+            jax.nn.one_hot(top_e, e, dtype=jnp.float32), axis=(0, 1)
+        ),
+    }
+    return out.reshape(b, t, d), diag

@@ -1,0 +1,106 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Training path uses an associative scan over T (log-depth on TPU); decode is
+a single gated-recurrence step.  The full recurrent block is:
+
+  x -> [gelu branch | conv1d -> RG-LRU branch] -> elementwise * -> out proj
+
+with   a_t = exp(-c * softplus(Lambda) * r_t),  r_t, i_t input-sigmoid gates,
+       h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init
+
+__all__ = [
+    "init_rglru_block",
+    "rglru_block",
+    "init_rglru_state",
+    "rglru_decode_step",
+]
+
+_C = 8.0
+
+
+def _width(cfg: ModelConfig) -> int:
+    return (cfg.hybrid.lru_width or cfg.d_model) if cfg.hybrid else cfg.d_model
+
+
+def init_rglru_block(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = _width(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_y": dense_init(ks[0], (d, w), cfg.pdtype),  # gelu branch
+        "w_x": dense_init(ks[1], (d, w), cfg.pdtype),  # recurrent branch
+        "conv": dense_init(ks[2], (4, w), cfg.pdtype, scale=0.5),
+        "w_i": dense_init(ks[3], (w, w), cfg.pdtype),  # input gate
+        "w_r": dense_init(ks[4], (w, w), cfg.pdtype),  # recurrence gate
+        "lam": jnp.full((w,), 2.0, cfg.pdtype),  # softplus(2) ~ 2.1
+        "w_o": dense_init(ks[5], (w, d), cfg.pdtype),
+    }
+
+
+def _gates(p, x):
+    i = jax.nn.sigmoid(x @ p["w_i"].astype(x.dtype))
+    r = jax.nn.sigmoid(x @ p["w_r"].astype(x.dtype))
+    log_a = (
+        -_C
+        * jax.nn.softplus(p["lam"].astype(jnp.float32))[None, None, :]
+        * r.astype(jnp.float32)
+    )
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (
+        i.astype(jnp.float32) * x.astype(jnp.float32)
+    )
+    return a, b
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i : i + x.shape[1]] * w[i][None, None, :]
+    return out
+
+
+def rglru_block(p: dict, u: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """u: (B, T, D) -> (B, T, D)."""
+    y = jax.nn.gelu(u @ p["w_y"].astype(u.dtype))
+    x = _causal_conv(u @ p["w_x"].astype(u.dtype), p["conv"].astype(u.dtype))
+    a, b = _gates(p, x)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(u.dtype)
+    return (h * y) @ p["w_o"].astype(u.dtype)
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> dict:
+    w = _width(cfg)
+    return {
+        "conv": jnp.zeros((batch, 3, w), cfg.cdtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rglru_decode_step(p: dict, u: jax.Array, state: dict, cfg: ModelConfig
+                      ) -> tuple[jax.Array, dict]:
+    """u: (B, 1, D) -> (y, new state); O(1) per token."""
+    y = jax.nn.gelu(u @ p["w_y"].astype(u.dtype))
+    xc = u @ p["w_x"].astype(u.dtype)  # (B, 1, W)
+    hist = jnp.concatenate([state["conv"], xc.astype(state["conv"].dtype)], 1)
+    w = p["conv"].astype(u.dtype)
+    x = jnp.einsum("bkc,kc->bc", hist.astype(u.dtype), w)[:, None, :]
+    a, b = _gates(p, x)  # (B, 1, W) each
+    h = a[:, 0] * state["h"] + b[:, 0]
+    out = (h[:, None, :].astype(u.dtype) * y) @ p["w_o"].astype(u.dtype)
+    return out, {"conv": hist[:, 1:], "h": h}

@@ -1,0 +1,174 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked parallel training form
+and constant-memory recurrent decode (arXiv:2405.21060, adapted to TPU:
+chunk-local quadratic attention-form on the MXU + a sequential scan over
+chunk states).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, rms_norm
+
+__all__ = ["init_ssm", "ssm_mixer", "init_ssm_state", "ssm_decode_step"]
+
+
+def _dims(cfg: ModelConfig):
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    n_heads = d_inner // sc.head_dim
+    return sc, d_inner, n_heads
+
+
+def init_ssm(key: jax.Array, cfg: ModelConfig) -> dict:
+    sc, d_inner, nh = _dims(cfg)
+    d = cfg.d_model
+    # in_proj -> [z (d_inner), x (d_inner), B (S), C (S), dt (nh)]
+    proj_out = 2 * d_inner + 2 * sc.d_state + nh
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, proj_out), cfg.pdtype),
+        "conv": dense_init(ks[1], (sc.d_conv, d_inner), cfg.pdtype, scale=0.5),
+        "A_log": jnp.zeros((nh,), cfg.pdtype),  # A = -exp(A_log)
+        "D": jnp.ones((nh,), cfg.pdtype),
+        "dt_bias": jnp.full((nh,), -2.0, cfg.pdtype),  # softplus ~ 0.12
+        "norm_g": jnp.ones((d_inner,), cfg.pdtype),
+        "out_proj": dense_init(ks[2], (d_inner, d), cfg.pdtype),
+    }
+
+
+def _split_proj(p, u, cfg):
+    sc, d_inner, nh = _dims(cfg)
+    zxbcdt = u @ p["in_proj"].astype(u.dtype)
+    z = zxbcdt[..., :d_inner]
+    x = zxbcdt[..., d_inner : 2 * d_inner]
+    bmat = zxbcdt[..., 2 * d_inner : 2 * d_inner + sc.d_state]
+    cmat = zxbcdt[..., 2 * d_inner + sc.d_state : 2 * d_inner + 2 * sc.d_state]
+    dt = zxbcdt[..., 2 * d_inner + 2 * sc.d_state :]
+    return z, x, bmat, cmat, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv along T.  x: (B, T, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i : i + x.shape[1]] * w[i][None, None, :]
+    return out
+
+
+def ssm_mixer(p: dict, u: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Chunked SSD forward.  u: (B, T, D) -> (B, T, D).
+
+    Recurrence per head h with state S_t in R^{P x N} (P=head_dim, N=d_state):
+      S_t = a_t * S_{t-1} + dt_t * x_t (x) B_t ;  y_t = S_t C_t + D * x_t
+    with a_t = exp(dt_t * A).  Chunk-local terms use the quadratic dual form.
+    """
+    sc, d_inner, nh = _dims(cfg)
+    b, t, _ = u.shape
+    hd = sc.head_dim
+    L = min(sc.chunk, t)
+    nchunk = -(-t // L)
+    tp = nchunk * L
+
+    z, x, bmat, cmat, dt = _split_proj(p, u, cfg)
+    x = jax.nn.silu(_causal_conv(x, p["conv"].astype(x.dtype)))
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # (B, T, H)
+    a_log = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,) negative
+    loga = dt * a_log[None, None, :]  # (B, T, H) log-decay <= 0
+
+    # pad to chunk multiple
+    pad = tp - t
+    xh = jnp.pad(x, ((0, 0), (0, pad), (0, 0))).reshape(b, nchunk, L, nh, hd)
+    bm = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0))).reshape(b, nchunk, L, -1)
+    cm = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0))).reshape(b, nchunk, L, -1)
+    dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0))).reshape(b, nchunk, L, nh)
+    lg = jnp.pad(loga, ((0, 0), (0, pad), (0, 0))).reshape(b, nchunk, L, nh)
+
+    cum = jnp.cumsum(lg, axis=2)  # (B, C, L, H) inclusive cumulative log-decay
+    xs = (xh.astype(jnp.float32) * dtp[..., None])  # dt-scaled inputs
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    # One chunk per scan step keeps the (B, L, L, H) intra-chunk gate as the
+    # peak working set (TPU-friendly; the chunk is the VMEM tile).
+    def chunk_step(h_prev, inp):
+        xs_c, bm_c, cm_c, cum_c = inp  # (B,L,H,P) (B,L,N) (B,L,N) (B,L,H)
+        bm32 = bm_c.astype(jnp.float32)
+        cm32 = cm_c.astype(jnp.float32)
+        scores = jnp.einsum("bln,bmn->blm", cm32, bm32)
+        decay = cum_c[:, :, None, :] - cum_c[:, None, :, :]  # (B,L,L,H)
+        gate = jnp.where(causal[None, :, :, None], jnp.exp(decay), 0.0)
+        y_intra = jnp.einsum("blm,blmh,bmhp->blhp", scores, gate, xs_c)
+        y_inter = jnp.einsum("bln,blh,bhnp->blhp", cm32, jnp.exp(cum_c), h_prev)
+        dec_end = jnp.exp(cum_c[:, -1:, :] - cum_c)  # (B,L,H)
+        state = jnp.einsum("bln,blh,blhp->bhnp", bm32, dec_end, xs_c)
+        h_new = h_prev * jnp.exp(cum_c[:, -1])[..., None, None] + state
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((b, nh, sc.d_state, hd), jnp.float32)
+    _, ys = jax.lax.scan(
+        chunk_step,
+        h0,
+        (
+            jnp.moveaxis(xs, 1, 0),
+            jnp.moveaxis(bm, 1, 0),
+            jnp.moveaxis(cm, 1, 0),
+            jnp.moveaxis(cum, 1, 0),
+        ),
+        unroll=cfg.scan_unroll,
+    )  # ys: (C, B, L, H, P)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, tp, nh, hd)[:, :t]
+    y = y + x.astype(jnp.float32).reshape(b, t, nh, hd) * p["D"].astype(
+        jnp.float32
+    )[None, None, :, None]
+    y = y.reshape(b, t, d_inner).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm_g"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(u.dtype)
+
+
+# ------------------------------------------------------------------- decode
+def init_ssm_state(cfg: ModelConfig, batch: int) -> dict:
+    sc, d_inner, nh = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, sc.d_conv - 1, d_inner), cfg.cdtype),
+        "ssm": jnp.zeros((batch, nh, sc.d_state, sc.head_dim), jnp.float32),
+    }
+
+
+def ssm_decode_step(p: dict, u: jax.Array, state: dict, cfg: ModelConfig
+                    ) -> tuple[jax.Array, dict]:
+    """u: (B, 1, D) -> (y (B, 1, D), new state).  O(1) in context length."""
+    sc, d_inner, nh = _dims(cfg)
+    b = u.shape[0]
+    hd = sc.head_dim
+    z, x, bmat, cmat, dt = _split_proj(p, u, cfg)
+
+    # conv ring buffer: history (B, K-1, C) + current
+    hist = jnp.concatenate([state["conv"], x.astype(state["conv"].dtype)], axis=1)
+    w = p["conv"].astype(x.dtype)  # (K, C)
+    xc = jnp.einsum("bkc,kc->bc", hist.astype(x.dtype), w)[:, None, :]
+    xc = jax.nn.silu(xc)
+    new_conv = hist[:, 1:]
+
+    dtf = jax.nn.softplus(
+        dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )[:, 0]  # (B, H)
+    a = jnp.exp(dtf * (-jnp.exp(p["A_log"].astype(jnp.float32)))[None, :])
+    xs = xc.astype(jnp.float32).reshape(b, nh, hd) * dtf[..., None]
+    bm = bmat.astype(jnp.float32)[:, 0]  # (B, N)
+    cm = cmat.astype(jnp.float32)[:, 0]
+    new_ssm = state["ssm"] * a[..., None, None] + jnp.einsum(
+        "bn,bhp->bhnp", bm, xs
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cm, new_ssm)
+    y = y + xc.astype(jnp.float32).reshape(b, nh, hd) * p["D"].astype(
+        jnp.float32
+    )[None, :, None]
+    y = y.reshape(b, 1, d_inner).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm_g"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(u.dtype), {"conv": new_conv, "ssm": new_ssm}

@@ -1,0 +1,395 @@
+"""Decoder-only LM assembly for the dense / moe / ssm / hybrid families.
+
+* Layers are stacked and iterated with ``lax.scan`` (constant compile time in
+  depth; per-layer psums inside the scan let XLA overlap compute with the TP
+  collectives).
+* Activation checkpointing (``cfg.remat``) wraps the block body.
+* The LM-head cross-entropy is computed in sequence chunks so the (B, T, V)
+  logits tensor never materializes (V up to 256k in the assigned archs).
+* Decode paths carry per-layer caches through the same scan.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from dataclasses import dataclass
+
+from . import attention as attn
+from . import embedding as emb
+from . import mlp as mlpm
+from . import moe as moem
+from . import rglru as rg
+from . import ssm as ssmm
+from .common import ModelConfig, dense_init, rms_norm
+
+__all__ = [
+    "RuntimeOptions",
+    "init_lm",
+    "lm_forward",
+    "lm_loss",
+    "init_lm_cache",
+    "lm_decode_step",
+]
+
+
+@dataclass(frozen=True)
+class RuntimeOptions:
+    """Beyond-paper optimization switches (EXPERIMENTS.md §Perf).
+
+    The defaults reproduce the paper-faithful baseline; the hillclimbed
+    configuration turns these on per (arch x shape) cell.
+    """
+
+    mesh: object = None  # jax Mesh (required by the shard_map paths)
+    sharded_moe: bool = False  # EP dispatch via shard_map (moe_sharded.py)
+    adaptive_embedding: bool = False  # AdHash hot-row replication
+    hot_ids: tuple[int, ...] = ()  # embedding replication plan
+    cold_frac: float = 1.0  # static cold-exchange capacity fraction
+    bf16_cache_math: bool = False  # decode: no f32 cast of the KV cache
+    kv_cache_int8: bool = False  # decode: quantized KV cache (s8 + scales)
+    slot_map: tuple[int, ...] | None = None  # hot-expert replication plan
+
+
+# ------------------------------------------------------------------- blocks
+def _init_block(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if cfg.family == "ssm":
+        return {
+            "ln1": jnp.ones((d,), cfg.pdtype),
+            "ssm": ssmm.init_ssm(ks[0], cfg),
+        }
+    p = {
+        "ln1": jnp.ones((d,), cfg.pdtype),
+        "ln2": jnp.ones((d,), cfg.pdtype),
+        "attn": attn.init_attention(ks[0], cfg),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moem.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = mlpm.init_swiglu(ks[1], cfg)
+    return p
+
+
+def _block(p: dict, x: jax.Array, cfg: ModelConfig,
+           slot_map: tuple[int, ...] | None = None,
+           opts: "RuntimeOptions | None" = None) -> jax.Array:
+    if cfg.family == "ssm":
+        return x + ssmm.ssm_mixer(p["ssm"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
+    h = x + attn.attention(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
+    z = rms_norm(h, p["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        if opts is not None and opts.sharded_moe:
+            from .moe_sharded import moe_ffn_sharded
+
+            y = moe_ffn_sharded(
+                p["moe"], z, cfg, opts.mesh,
+                slot_map=opts.slot_map or slot_map,
+            )
+        else:
+            y, _diag = moem.moe_ffn(p["moe"], z, cfg, slot_map)
+    else:
+        y = mlpm.swiglu(p["mlp"], z)
+    return h + y
+
+
+# hybrid (RecurrentGemma): groups of (rec, rec, local-attn), each + MLP
+def _init_hybrid_group(key: jax.Array, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+
+    def sub(k, kind):
+        k1, k2 = jax.random.split(k)
+        mixer = (
+            rg.init_rglru_block(k1, cfg)
+            if kind == "rec"
+            else attn.init_attention(k1, cfg, kv_heads=cfg.n_kv_heads)
+        )
+        return {
+            "ln1": jnp.ones((d,), cfg.pdtype),
+            "mixer": mixer,
+            "ln2": jnp.ones((d,), cfg.pdtype),
+            "mlp": mlpm.init_swiglu(k2, cfg),
+        }
+
+    return {
+        "rec1": sub(ks[0], "rec"),
+        "rec2": sub(ks[1], "rec"),
+        "attn": sub(ks[2], "attn"),
+    }
+
+
+def _hybrid_sub(p: dict, x: jax.Array, cfg: ModelConfig, kind: str) -> jax.Array:
+    z = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "rec":
+        h = x + rg.rglru_block(p["mixer"], z, cfg)
+    else:
+        h = x + attn.attention(
+            p["mixer"], z, cfg, window=cfg.hybrid.window
+        )
+    z2 = rms_norm(h, p["ln2"], cfg.norm_eps)
+    return h + mlpm.swiglu(p["mlp"], z2)
+
+
+def _hybrid_group(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = _hybrid_sub(p["rec1"], x, cfg, "rec")
+    x = _hybrid_sub(p["rec2"], x, cfg, "rec")
+    x = _hybrid_sub(p["attn"], x, cfg, "attn")
+    return x
+
+
+# ---------------------------------------------------------------- init / fwd
+def _hybrid_counts(cfg: ModelConfig) -> tuple[int, int]:
+    """(full groups of 3, trailing recurrent layers)."""
+    n_groups, rem = divmod(cfg.n_layers, 3)
+    return n_groups, rem
+
+
+def init_lm(key: jax.Array, cfg: ModelConfig) -> dict:
+    k_emb, k_blocks, k_tail, k_ln = jax.random.split(key, 4)
+    params: dict = {"embed": emb.init_embedding(k_emb, cfg)}
+    if cfg.family == "hybrid":
+        ng, rem = _hybrid_counts(cfg)
+        keys = jax.random.split(k_blocks, ng)
+        params["groups"] = jax.vmap(lambda k: _init_hybrid_group(k, cfg))(keys)
+        tails = []
+        for i in range(rem):
+            sub_k = jax.random.fold_in(k_tail, i)
+            k1, k2 = jax.random.split(sub_k)
+            tails.append(
+                {
+                    "ln1": jnp.ones((cfg.d_model,), cfg.pdtype),
+                    "mixer": rg.init_rglru_block(k1, cfg),
+                    "ln2": jnp.ones((cfg.d_model,), cfg.pdtype),
+                    "mlp": mlpm.init_swiglu(k2, cfg),
+                }
+            )
+        params["tail"] = tails
+    else:
+        keys = jax.random.split(k_blocks, cfg.n_layers)
+        params["blocks"] = jax.vmap(lambda k: _init_block(k, cfg))(keys)
+    params["ln_f"] = jnp.ones((cfg.d_model,), cfg.pdtype)
+    return params
+
+
+def lm_forward(
+    params: dict,
+    tokens: jax.Array,  # (B, T) int32
+    cfg: ModelConfig,
+    slot_map: tuple[int, ...] | None = None,
+    inputs_embeds: jax.Array | None = None,  # VLM/audio prepended embeddings
+    opts: RuntimeOptions | None = None,
+) -> jax.Array:
+    """Returns final hidden states (B, T', D) after ln_f."""
+    if opts is not None and opts.adaptive_embedding and opts.mesh is not None:
+        m = opts.mesh.shape.get("model", 1)
+        per_shard = tokens.shape[0] * tokens.shape[1]
+        cold_cap = max(8, int(per_shard * opts.cold_frac / m))
+        x, _overflow = emb.adaptive_embed(
+            params["embed"], tokens, cfg, opts.hot_ids, cold_cap, opts.mesh
+        )
+    else:
+        x = emb.embed(params["embed"], tokens, cfg)
+    if inputs_embeds is not None:
+        x = jnp.concatenate([inputs_embeds.astype(x.dtype), x], axis=1)
+
+    if cfg.family == "hybrid":
+        def group_fn(h, gp):
+            fn = _hybrid_group
+            if cfg.remat:
+                fn = jax.checkpoint(fn, static_argnums=(2,))
+            return fn(gp, h, cfg), None
+
+        x, _ = jax.lax.scan(lambda h, gp: group_fn(h, gp), x, params["groups"],
+                            unroll=cfg.scan_unroll)
+        for tp in params["tail"]:
+            x = _hybrid_sub(tp, x, cfg, "rec")
+    else:
+        def block_fn(h, bp):
+            fn = partial(_block, cfg=cfg, slot_map=slot_map, opts=opts)
+            if cfg.remat:
+                policy = (
+                    jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                    if cfg.remat_policy == "dots"
+                    else None
+                )
+                fn = jax.checkpoint(fn, policy=policy)
+            return fn(bp, h), None
+
+        x, _ = jax.lax.scan(block_fn, x, params["blocks"],
+                            unroll=cfg.scan_unroll)
+    return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def lm_loss(
+    params: dict,
+    tokens: jax.Array,  # (B, T)
+    labels: jax.Array,  # (B, T), -1 = masked
+    cfg: ModelConfig,
+    slot_map: tuple[int, ...] | None = None,
+    inputs_embeds: jax.Array | None = None,
+    loss_chunk: int = 128,
+    opts: RuntimeOptions | None = None,
+) -> jax.Array:
+    h = lm_forward(params, tokens, cfg, slot_map, inputs_embeds, opts)
+    if inputs_embeds is not None:
+        h = h[:, inputs_embeds.shape[1]:]  # loss over text positions only
+    w_out = (
+        params["embed"]["table"].T
+        if cfg.tie_embeddings
+        else params["embed"]["out"]
+    )
+    # hoist the param->compute-dtype convert OUT of the chunk scan: inside
+    # the body it re-reads + re-converts the (D, V) head every chunk step
+    # (measured ~17 GB/chip/step on qwen1.5-4b train_4k; §Perf iteration 3)
+    w_out = w_out.astype(h.dtype)
+    b, t, d = h.shape
+    c = min(loss_chunk, t)
+    nc = -(-t // c)
+    tp = nc * c
+    hp = jnp.pad(h, ((0, 0), (0, tp - t), (0, 0))).reshape(b, nc, c, d)
+    lp = jnp.pad(labels, ((0, 0), (0, tp - t)), constant_values=-1)
+    lp = lp.reshape(b, nc, c)
+
+    def chunk_loss(carry, inp):
+        hc, lc = inp  # (B, c, D), (B, c)
+        logits = (hc @ w_out).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        nll = (lse - gold) * mask
+        tot, cnt = carry
+        return (tot + nll.sum(), cnt + mask.sum()), None
+
+    fn = chunk_loss
+    if cfg.remat:
+        fn = jax.checkpoint(chunk_loss, prevent_cse=False)
+    (tot, cnt), _ = jax.lax.scan(
+        fn,
+        (jnp.float32(0.0), jnp.float32(0.0)),
+        (jnp.moveaxis(hp, 1, 0), jnp.moveaxis(lp, 1, 0)),
+        unroll=cfg.scan_unroll,
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ------------------------------------------------------------------- decode
+def init_lm_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  opts: "RuntimeOptions | None" = None) -> dict:
+    int8 = bool(opts is not None and opts.kv_cache_int8)
+    if cfg.family == "ssm":
+        st = ssmm.init_ssm_state(cfg, batch)
+        return {
+            "ssm": jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x[None], (cfg.n_layers,) + x.shape
+                ),
+                st,
+            )
+        }
+    if cfg.family == "hybrid":
+        ng, rem = _hybrid_counts(cfg)
+        rec = rg.init_rglru_state(cfg, batch)
+        kv = attn.init_kv_cache(cfg, batch, min(cfg.hybrid.window, max_len))
+        return {
+            "rec1": jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (ng,) + x.shape), rec
+            ),
+            "rec2": jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (ng,) + x.shape), rec
+            ),
+            "attn": jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (ng,) + x.shape), kv
+            ),
+            "tail": [rg.init_rglru_state(cfg, batch) for _ in range(rem)],
+        }
+    kv = attn.init_kv_cache(cfg, batch, max_len, int8=int8)
+    return {
+        "kv": jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), kv
+        )
+    }
+
+
+def lm_decode_step(
+    params: dict,
+    cache: dict,
+    tokens: jax.Array,  # (B, 1) current token
+    pos: jax.Array,  # scalar int32 position
+    cfg: ModelConfig,
+    slot_map: tuple[int, ...] | None = None,
+    opts: RuntimeOptions | None = None,
+) -> tuple[jax.Array, dict]:
+    """One decode step.  Returns (logits (B, 1, V), updated cache)."""
+    f32c = not (opts is not None and opts.bf16_cache_math)
+    x = emb.embed(params["embed"], tokens, cfg)
+
+    if cfg.family == "ssm":
+        def step(h, inp):
+            bp, st = inp
+            z = rms_norm(h, bp["ln1"], cfg.norm_eps)
+            y, st2 = ssmm.ssm_decode_step(bp["ssm"], z, st, cfg)
+            return h + y, st2
+
+        x, new_ssm = jax.lax.scan(step, x, (params["blocks"], cache["ssm"]),
+                                  unroll=cfg.scan_unroll)
+        new_cache = {"ssm": new_ssm}
+
+    elif cfg.family == "hybrid":
+        def sub_dec(sp, h, st, kind):
+            z = rms_norm(h, sp["ln1"], cfg.norm_eps)
+            if kind == "rec":
+                y, st2 = rg.rglru_decode_step(sp["mixer"], z, st, cfg)
+            else:
+                y, st2 = attn.decode_attention(
+                    sp["mixer"], z, st, pos, cfg, window=cfg.hybrid.window
+                )
+            h = h + y
+            z2 = rms_norm(h, sp["ln2"], cfg.norm_eps)
+            return h + mlpm.swiglu(sp["mlp"], z2), st2
+
+        def gstep(h, inp):
+            gp, st1, st2, stkv = inp
+            h, n1 = sub_dec(gp["rec1"], h, st1, "rec")
+            h, n2 = sub_dec(gp["rec2"], h, st2, "rec")
+            h, nkv = sub_dec(gp["attn"], h, stkv, "attn")
+            return h, (n1, n2, nkv)
+
+        x, (n1, n2, nkv) = jax.lax.scan(
+            gstep,
+            x,
+            (params["groups"], cache["rec1"], cache["rec2"], cache["attn"]),
+            unroll=cfg.scan_unroll,
+        )
+        new_tail = []
+        for tp, st in zip(params["tail"], cache["tail"]):
+            x, st2 = sub_dec(tp, x, st, "rec")
+            new_tail.append(st2)
+        new_cache = {"rec1": n1, "rec2": n2, "attn": nkv, "tail": new_tail}
+
+    else:
+        def step(h, inp):
+            bp, kv = inp
+            z = rms_norm(h, bp["ln1"], cfg.norm_eps)
+            y, kv2 = attn.decode_attention(bp["attn"], z, kv, pos, cfg,
+                                           f32_cache_math=f32c)
+            h = h + y
+            z2 = rms_norm(h, bp["ln2"], cfg.norm_eps)
+            if cfg.moe is not None:
+                f, _ = moem.moe_ffn(bp["moe"], z2, cfg, slot_map)
+            else:
+                f = mlpm.swiglu(bp["mlp"], z2)
+            return h + f, kv2
+
+        x, new_kv = jax.lax.scan(step, x, (params["blocks"], cache["kv"]),
+                                 unroll=cfg.scan_unroll)
+        new_cache = {"kv": new_kv}
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = emb.lm_head(params["embed"], x, cfg)
+    return logits, new_cache

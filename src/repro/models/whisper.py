@@ -1,0 +1,190 @@
+"""Whisper-style encoder-decoder (audio family).
+
+Per the assignment spec the conv/mel frontend is a STUB: ``input_specs``
+provides precomputed frame embeddings (B, n_frames, d_model).  The backbone
+is the real enc-dec transformer: bidirectional encoder, causal decoder with
+cross-attention, learned positional embeddings, pre-LayerNorm.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mlp as mlpm
+from .common import ModelConfig, dense_init
+
+__all__ = [
+    "init_whisper",
+    "whisper_encode",
+    "whisper_loss",
+    "init_whisper_cache",
+    "whisper_decode_step",
+]
+
+
+def _layer_norm(x, g, b, eps):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * g.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _init_ln(d, dt):
+    return {"g": jnp.ones((d,), dt), "b": jnp.zeros((d,), dt)}
+
+
+def _init_enc_layer(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "ln1": _init_ln(d, cfg.pdtype),
+        "attn": attn.init_attention(k1, cfg),
+        "ln2": _init_ln(d, cfg.pdtype),
+        "mlp": mlpm.init_gelu_mlp(k2, cfg),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "ln1": _init_ln(d, cfg.pdtype),
+        "self": attn.init_attention(k1, cfg),
+        "ln2": _init_ln(d, cfg.pdtype),
+        "cross": attn.init_attention(k2, cfg),
+        "ln3": _init_ln(d, cfg.pdtype),
+        "mlp": mlpm.init_gelu_mlp(k3, cfg),
+    }
+
+
+def init_whisper(key: jax.Array, cfg: ModelConfig, max_dec_len: int = 4096
+                 ) -> dict:
+    ec = cfg.encdec
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], ec.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "enc_pos": dense_init(ks[2], (ec.n_frames, cfg.d_model), cfg.pdtype,
+                              scale=0.02),
+        "dec_pos": dense_init(ks[3], (max_dec_len, cfg.d_model), cfg.pdtype,
+                              scale=0.02),
+        "tok": dense_init(ks[4], (cfg.vocab_size, cfg.d_model), cfg.pdtype,
+                          scale=1.0),
+        "enc": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "dec": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "ln_enc": _init_ln(cfg.d_model, cfg.pdtype),
+        "ln_dec": _init_ln(cfg.d_model, cfg.pdtype),
+    }
+
+
+def whisper_encode(p: dict, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames: (B, F, D) stub embeddings -> encoder states."""
+    x = frames.astype(cfg.cdtype) + p["enc_pos"][None, : frames.shape[1]].astype(
+        cfg.cdtype
+    )
+
+    def layer(h, lp):
+        z = _layer_norm(h, lp["ln1"]["g"], lp["ln1"]["b"], cfg.norm_eps)
+        h = h + attn.attention(lp["attn"], z, cfg, causal=False, use_rope=False)
+        z = _layer_norm(h, lp["ln2"]["g"], lp["ln2"]["b"], cfg.norm_eps)
+        return h + mlpm.gelu_mlp(lp["mlp"], z), None
+
+    x, _ = jax.lax.scan(layer, x, p["enc"], unroll=cfg.scan_unroll)
+    return _layer_norm(x, p["ln_enc"]["g"], p["ln_enc"]["b"], cfg.norm_eps)
+
+
+def _decode_stack(p, x, enc, cfg):
+    def layer(h, lp):
+        z = _layer_norm(h, lp["ln1"]["g"], lp["ln1"]["b"], cfg.norm_eps)
+        h = h + attn.attention(lp["self"], z, cfg, use_rope=False)
+        z = _layer_norm(h, lp["ln2"]["g"], lp["ln2"]["b"], cfg.norm_eps)
+        h = h + attn.cross_attention(lp["cross"], z, enc, cfg)
+        z = _layer_norm(h, lp["ln3"]["g"], lp["ln3"]["b"], cfg.norm_eps)
+        return h + mlpm.gelu_mlp(lp["mlp"], z), None
+
+    x, _ = jax.lax.scan(layer, x, p["dec"], unroll=cfg.scan_unroll)
+    return _layer_norm(x, p["ln_dec"]["g"], p["ln_dec"]["b"], cfg.norm_eps)
+
+
+def whisper_loss(
+    p: dict,
+    frames: jax.Array,  # (B, F, D) stub frame embeddings
+    tokens: jax.Array,  # (B, T)
+    labels: jax.Array,  # (B, T)
+    cfg: ModelConfig,
+    loss_chunk: int = 128,
+) -> jax.Array:
+    enc = whisper_encode(p, frames, cfg)
+    t = tokens.shape[1]
+    x = jnp.take(p["tok"], tokens, axis=0).astype(cfg.cdtype)
+    x = x + p["dec_pos"][None, :t].astype(cfg.cdtype)
+    h = _decode_stack(p, x, enc, cfg)
+
+    logits32 = None  # chunked CE against tied token embedding
+    b, t, d = h.shape
+    c = min(loss_chunk, t)
+    nc = -(-t // c)
+    hp = jnp.pad(h, ((0, 0), (0, nc * c - t), (0, 0))).reshape(b, nc, c, d)
+    lp = jnp.pad(labels, ((0, 0), (0, nc * c - t)), constant_values=-1)
+    lp = lp.reshape(b, nc, c)
+
+    def chunk(carry, inp):
+        hc, lc = inp
+        logits = (hc @ p["tok"].T.astype(hc.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        tot, cnt = carry
+        return (tot + ((lse - gold) * mask).sum(), cnt + mask.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        chunk,
+        (jnp.float32(0.0), jnp.float32(0.0)),
+        (jnp.moveaxis(hp, 1, 0), jnp.moveaxis(lp, 1, 0)),
+        unroll=cfg.scan_unroll,
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def init_whisper_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    kv = attn.init_kv_cache(cfg, batch, max_len)
+    return {
+        "kv": jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), kv
+        )
+    }
+
+
+def whisper_decode_step(
+    p: dict,
+    cache: dict,
+    enc: jax.Array,  # (B, F, D) encoder states (from prefill)
+    tokens: jax.Array,  # (B, 1)
+    pos: jax.Array,
+    cfg: ModelConfig,
+) -> tuple[jax.Array, dict]:
+    x = jnp.take(p["tok"], tokens, axis=0).astype(cfg.cdtype)
+    x = x + jax.lax.dynamic_slice_in_dim(p["dec_pos"], pos, 1, axis=0)[
+        None
+    ].astype(cfg.cdtype)[:, 0:1]
+
+    def layer(h, inp):
+        lp, kv = inp
+        z = _layer_norm(h, lp["ln1"]["g"], lp["ln1"]["b"], cfg.norm_eps)
+        y, kv2 = attn.decode_attention(lp["self"], z, kv, pos, cfg,
+                                       use_rope=False)
+        h = h + y
+        z = _layer_norm(h, lp["ln2"]["g"], lp["ln2"]["b"], cfg.norm_eps)
+        h = h + attn.cross_attention(lp["cross"], z, enc, cfg)
+        z = _layer_norm(h, lp["ln3"]["g"], lp["ln3"]["b"], cfg.norm_eps)
+        return h + mlpm.gelu_mlp(lp["mlp"], z), kv2
+
+    x, new_kv = jax.lax.scan(layer, x, (p["dec"], cache["kv"]),
+                             unroll=cfg.scan_unroll)
+    x = _layer_norm(x, p["ln_dec"]["g"], p["ln_dec"]["b"], cfg.norm_eps)
+    logits = x @ p["tok"].T.astype(x.dtype)
+    return logits, {"kv": new_kv}

@@ -1,0 +1,124 @@
+"""Fault tolerance & large-scale runnability (DESIGN §6; paper §3.1).
+
+The paper's recovery story, mapped onto this framework:
+
+  master state   dictionary + global statistics are read-only after
+                 bootstrap -> persisted once, reloaded on master restart.
+  heat map / PI  reconstructed by replaying the (append-only) query log —
+                 this module implements the replay.
+  worker shards  subject-hash partitioning is *stateless*: worker w owns
+                 H(s) mod W.  On worker loss the replacement re-derives its
+                 shard from the data source (or a checkpoint); on elastic
+                 resize W -> W', shards are re-derived with the new modulus
+                 (``rehash_assignments``).  Replica-index contents are
+                 disposable (cache semantics): they are rebuilt by the IRD
+                 process as queries arrive — the pay-as-you-go property
+                 makes replica loss a performance event, not a correctness
+                 event.
+  LM training    sharded atomic checkpoints (repro.checkpoint) + the
+                 deterministic per-(step, host) data pipeline give
+                 restart-consistency; elastic restore re-places arrays on a
+                 different mesh.
+
+Straggler mitigation (``StragglerPolicy``): inside one XLA program there are
+no software stragglers (bulk-synchronous collectives), so mitigation lives
+at the step boundary: per-step deadlines, skip-and-log for late pods (the
+gradient all-reduce over the `pod` axis tolerates a missing contribution by
+re-weighting), and backup-step speculation for the tail.  On CPU we test the
+policy logic with injected delays.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.engine import AdHashEngine
+from repro.core.partition import hash_ids
+from repro.core.query import Query
+
+__all__ = ["replay_query_log", "rehash_assignments", "StragglerPolicy",
+           "HeartbeatMonitor"]
+
+
+def replay_query_log(engine: AdHashEngine, queries: list[Query]) -> None:
+    """Rebuild heat map + pattern index by replaying the query log
+    (paper §3.1: 'The PI can be easily recovered by reading the query log
+    and reconstructing the heat map')."""
+    from repro.core.transform import build_redistribution_tree
+
+    for q in queries:
+        tree = build_redistribution_tree(q, engine.stats, engine.heuristic)
+        engine.heatmap.insert(tree)
+        engine._maybe_redistribute()
+
+
+def rehash_assignments(subjects: np.ndarray, old_w: int, new_w: int
+                       ) -> np.ndarray:
+    """Elastic resize: which triples move when W changes (mod-W re-hash).
+
+    Returns a boolean mask of triples whose owner changes; the expected
+    fraction is 1 - old_w/new_w for growth (minimal movement is a property
+    hash partitioning gives up; the paper accepts it for startup speed —
+    consistent-hash variants can be layered on the same interface).
+    """
+    h = hash_ids(subjects)
+    return (h % old_w) != (h % new_w)
+
+
+@dataclass
+class StragglerPolicy:
+    """Step-boundary straggler handling for the multi-pod training loop."""
+
+    deadline_s: float = 30.0
+    max_consecutive_skips: int = 3
+    skipped: dict[int, int] = field(default_factory=dict)
+
+    def classify(self, pod_times: dict[int, float]) -> dict[int, str]:
+        """'ok' | 'straggler' (past deadline -> contribution skipped)."""
+        out = {}
+        for pod, t in pod_times.items():
+            if t <= self.deadline_s:
+                out[pod] = "ok"
+                self.skipped[pod] = 0
+            else:
+                n = self.skipped.get(pod, 0) + 1
+                self.skipped[pod] = n
+                out[pod] = "evict" if n > self.max_consecutive_skips else "straggler"
+        return out
+
+    def reweight(self, statuses: dict[int, str]) -> dict[int, float]:
+        """Gradient re-weighting when pods are skipped: surviving pods are
+        scaled by n_pods / n_ok so the expected gradient is unbiased."""
+        ok = [p for p, s in statuses.items() if s == "ok"]
+        if not ok:
+            return {p: 0.0 for p in statuses}
+        w = len(statuses) / len(ok)
+        return {p: (w if s == "ok" else 0.0) for p, s in statuses.items()}
+
+
+class HeartbeatMonitor:
+    """Failure detector: workers report heartbeats; silence past the timeout
+    marks a worker failed and triggers shard recovery (re-hash or restore)."""
+
+    def __init__(self, n_workers: int, timeout_s: float = 60.0):
+        self.timeout = timeout_s
+        self.last_seen = {w: time.monotonic() for w in range(n_workers)}
+
+    def beat(self, worker: int, now: float | None = None) -> None:
+        self.last_seen[worker] = now if now is not None else time.monotonic()
+
+    def failed_workers(self, now: float | None = None) -> list[int]:
+        now = now if now is not None else time.monotonic()
+        return [
+            w for w, t in self.last_seen.items() if now - t > self.timeout
+        ]
+
+    def recovery_plan(self, failed: list[int], n_workers: int) -> dict:
+        """Shard-recovery plan: failed worker shards are re-derivable from
+        the deterministic partitioner; replicas rebuild lazily via IRD."""
+        return {
+            "restore": {w: f"subject-hash shard {w} of {n_workers}" for w in failed},
+            "replicas": "rebuilt lazily by IRD (cache semantics)",
+        }

@@ -1,0 +1,70 @@
+"""The paper's running example (Figure 1 graph) as reusable test fixtures.
+
+Triples t1-t10 are named as in Table 7; degrees are consistent with the
+statistics worked out in Figure 4 (advisor: |p|=4, |p.s|=3, |p.o|=2,
+pS=(1+3+4)/3, pO=(6+4)/2=5).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.dictionary import Dictionary
+from repro.core.query import Const, Query, TriplePattern, Var
+
+TRIPLES_STR = [
+    # academic network of Figure 1
+    ("Bill", "worksFor", "CS"),
+    ("James", "worksFor", "CS"),
+    ("Lisa", "advisor", "James"),
+    ("Lisa", "advisor", "Bill"),
+    ("John", "advisor", "Bill"),
+    ("Fred", "advisor", "Bill"),
+    ("Lisa", "uGradFrom", "MIT"),  # t1
+    ("James", "gradFrom", "MIT"),  # t2
+    ("Bill", "uGradFrom", "CMU"),  # t3
+    ("James", "uGradFrom", "CMU"),  # t4
+    ("John", "uGradFrom", "CMU"),  # t5
+    ("Bill", "gradFrom", "CMU"),  # t6
+    # type edges make the Figure 4 degree arithmetic come out exactly
+    ("Lisa", "type", "Grad"),
+    ("John", "type", "Grad"),
+]
+
+
+def load_example() -> tuple[Dictionary, np.ndarray]:
+    d = Dictionary()
+    enc = d.encode_triples(TRIPLES_STR)
+    return d, enc
+
+
+def v(name: str) -> Var:
+    return Var(name)
+
+
+def c(d: Dictionary, term: str) -> Const:
+    tid = d.lookup(term)
+    assert tid is not None, term
+    return Const(tid)
+
+
+def prof_query(d: Dictionary) -> Query:
+    """Figure 2: professors working for CS, with their advisees."""
+    return Query(
+        [
+            TriplePattern(v("prof"), c(d, "worksFor"), c(d, "CS")),  # q1
+            TriplePattern(v("stud"), c(d, "advisor"), v("prof")),  # q2
+        ],
+        name="Q_fig2",
+    )
+
+
+def prof_query3(d: Dictionary) -> Query:
+    """Q_prof of §4.1.2: Figure 2 plus (?stud, uGradFrom, ?univ)."""
+    q = prof_query(d)
+    q3 = TriplePattern(v("stud"), c(d, "uGradFrom"), v("univ"))
+    return Query(q.patterns + [q3], name="Q_prof")
+
+
+def expected_fig2(d: Dictionary) -> set[tuple[int, int]]:
+    pairs = [("James", "Lisa"), ("Bill", "John"), ("Bill", "Fred"), ("Bill", "Lisa")]
+    return {(d.lookup(a), d.lookup(b)) for a, b in pairs}

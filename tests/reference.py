@@ -1,0 +1,45 @@
+"""Pure-python brute-force BGP matcher — the oracle for all engine tests."""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+from repro.core.query import Const, Query, TriplePattern, Var
+
+
+def match_query(triples: np.ndarray, query: Query) -> set[tuple[int, ...]]:
+    """All bindings of query.vars (in query.vars order), brute force."""
+    triples = np.asarray(triples)
+    bindings: list[dict[Var, int]] = [dict()]
+    for pat in query.patterns:
+        new: list[dict[Var, int]] = []
+        for b in bindings:
+            for row in triples:
+                nb = _match_one(pat, row, b)
+                if nb is not None:
+                    new.append(nb)
+        bindings = new
+        if not bindings:
+            break
+    out = set()
+    for b in bindings:
+        out.add(tuple(int(b[v]) for v in query.vars))
+    return out
+
+
+def _match_one(pat: TriplePattern, row: np.ndarray, b: dict[Var, int]
+               ) -> dict[Var, int] | None:
+    nb = dict(b)
+    for term, val in zip((pat.s, pat.p, pat.o), row):
+        val = int(val)
+        if isinstance(term, Const):
+            if term.id != val:
+                return None
+        else:
+            if term in nb:
+                if nb[term] != val:
+                    return None
+            else:
+                nb[term] = val
+    return nb

@@ -1,0 +1,156 @@
+"""DSJ + Algorithm 1 executor vs the brute-force oracle.
+
+Covers the paper's worked examples (§4.1: Tables 3-5, both orderings of the
+Figure 2 query; the Q_prof 3-pattern query of §4.1.2) and randomized graphs.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (enables x64)
+from repro.core.executor import Executor
+from repro.core.partition import partition_by_subject
+from repro.core.query import Query, TriplePattern, Var
+from repro.core.triples import ShardedTripleStore
+
+from paper_example import (
+    c,
+    expected_fig2,
+    load_example,
+    prof_query,
+    prof_query3,
+    v,
+)
+from reference import match_query
+
+
+def make_store(triples: np.ndarray, w: int) -> ShardedTripleStore:
+    assign = partition_by_subject(triples, w)
+    return ShardedTripleStore.build(triples, assign, w)
+
+
+def run(store, w, query, ordering, join_vars, cap=64):
+    ex = Executor(store, w)
+    rel, stats = ex.execute(query, ordering, join_vars, capacity=cap)
+    return rel, stats
+
+
+@pytest.mark.parametrize("w", [1, 2, 4])
+@pytest.mark.parametrize("ordering", [[0, 1], [1, 0]])
+def test_fig2_query_both_orderings(w, ordering):
+    """q1 |><| q2 and q2 |><| q1 give identical results (Tables 4 vs 5)."""
+    d, triples = load_example()
+    store = make_store(triples, w)
+    q = prof_query(d)
+    rel, stats = run(store, w, q, ordering, [Var("prof")])
+    got = set(map(tuple, rel.project_to([Var("prof"), Var("stud")])))
+    assert got == expected_fig2(d)
+    # q1 first: join col of q2 is its object -> broadcast (case iii)
+    # q2 first: join col of q1 is its subject -> hash distribute (case ii)
+    if w > 1:
+        kind = "bcast" if ordering == [0, 1] else "hash"
+        assert any(kind in step for step in stats.plan), stats.plan
+
+
+@pytest.mark.parametrize("w", [2, 4])
+def test_qprof_pinned_subject_local_join(w):
+    """§4.1.2: ordering q2,q1,q3 makes the q3 join communication-free."""
+    d, triples = load_example()
+    store = make_store(triples, w)
+    q = prof_query3(d)
+    # ordering q2, q1, q3 -> pinned subject = ?stud -> q3 joins locally
+    rel, stats = run(store, w, q, [1, 0, 2], [Var("prof"), Var("stud")])
+    ref = match_query(triples, q)
+    got = set(map(tuple, rel.project_to(q.vars)))
+    assert got == ref
+    assert stats.n_local_joins == 1, stats.plan
+    assert stats.n_dsj == 1, stats.plan
+
+    # ordering q1, q2, q3 -> both joins need communication (Fig. 5a)
+    rel2, stats2 = run(store, w, q, [0, 1, 2], [Var("prof"), Var("stud")])
+    got2 = set(map(tuple, rel2.project_to(q.vars)))
+    assert got2 == ref
+    assert stats2.n_dsj == 2, stats2.plan
+    if w > 1:
+        assert stats2.comm_cells >= stats.comm_cells
+
+
+@pytest.mark.parametrize("w", [1, 3, 4])
+def test_subject_star_no_comm(w):
+    """Subject stars run in parallel mode — zero communication (§4.1)."""
+    d, triples = load_example()
+    store = make_store(triples, w)
+    q = Query(
+        [
+            TriplePattern(v("s"), c(d, "advisor"), v("p")),
+            TriplePattern(v("s"), c(d, "uGradFrom"), v("u")),
+        ]
+    )
+    rel, stats = run(store, w, q, [0, 1], [Var("s")])
+    assert stats.comm_cells == 0
+    assert stats.mode == "parallel"
+    assert set(map(tuple, rel.project_to(q.vars))) == match_query(triples, q)
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("w", [1, 4])
+def test_random_graph_chain_query(seed, w):
+    rng = np.random.default_rng(seed)
+    n_v, n_p, n_t = 40, 4, 300
+    triples = np.unique(
+        np.stack(
+            [
+                rng.integers(0, n_v, n_t),
+                n_v + rng.integers(0, n_p, n_t),
+                rng.integers(0, n_v, n_t),
+            ],
+            axis=1,
+        ).astype(np.int64),
+        axis=0,
+    )
+    store = make_store(triples, w)
+    from repro.core.query import Const
+
+    q = Query(
+        [
+            TriplePattern(v("a"), Const(n_v + 0), v("b")),
+            TriplePattern(v("b"), Const(n_v + 1), v("c")),
+            TriplePattern(v("c"), Const(n_v + 2), v("d")),
+        ]
+    )
+    ref = match_query(triples, q)
+    for ordering, join_vars in [
+        ([0, 1, 2], [Var("b"), Var("c")]),
+        ([1, 0, 2], [Var("b"), Var("c")]),
+        ([2, 1, 0], [Var("c"), Var("b")]),
+    ]:
+        rel, _ = run(store, w, q, ordering, join_vars, cap=512)
+        got = set(map(tuple, rel.project_to(q.vars)))
+        assert got == ref, (ordering, len(got), len(ref))
+
+
+@pytest.mark.parametrize("w", [4])
+def test_object_object_join(w):
+    """Object-object joins force broadcast (case iii) but stay correct."""
+    d, triples = load_example()
+    store = make_store(triples, w)
+    q = Query(
+        [
+            TriplePattern(v("x"), c(d, "uGradFrom"), v("u")),
+            TriplePattern(v("y"), c(d, "gradFrom"), v("u")),
+        ]
+    )
+    rel, stats = run(store, w, q, [0, 1], [Var("u")])
+    assert set(map(tuple, rel.project_to(q.vars))) == match_query(triples, q)
+    assert stats.n_dsj == 1
+
+
+def test_single_pattern_and_constants():
+    d, triples = load_example()
+    store = make_store(triples, 2)
+    q = Query([TriplePattern(v("s"), c(d, "advisor"), c(d, "Bill"))])
+    rel, stats = run(store, 2, q, [0], [])
+    assert stats.comm_cells == 0
+    got = {r[0] for r in rel.to_numpy()}
+    assert got == {d.lookup("Lisa"), d.lookup("John"), d.lookup("Fred")}

@@ -1,0 +1,147 @@
+"""End-to-end engine tests: adaptivity (IRD), pattern index hits, eviction,
+AdHash vs AdHash-NA communication, load balancing."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401
+from repro.core.engine import AdHashEngine
+from repro.core.query import Const, Query, TriplePattern, Var
+
+from paper_example import c, expected_fig2, load_example, prof_query, v
+from reference import match_query
+
+
+def fig2_result(rel, q):
+    return set(map(tuple, rel.project_to([Var("prof"), Var("stud")])))
+
+
+@pytest.mark.parametrize("w", [2, 4])
+def test_engine_adapts_to_hot_pattern(w):
+    d, triples = load_example()
+    eng = AdHashEngine(triples, w, adaptive=True, frequency_threshold=5,
+                       capacity=256)
+    q = prof_query(d)
+    expected = expected_fig2(d)
+    modes = []
+    for i in range(8):
+        rel, st = eng.query(q)
+        assert fig2_result(rel, q) == expected, f"query {i} wrong"
+        modes.append(st.mode)
+    # first queries distributed; after the threshold the pattern is
+    # redistributed and later queries run in parallel mode, zero comm
+    assert modes[0] == "distributed"
+    assert modes[-1] == "parallel-replica"
+    assert eng.report.n_redistributions >= 1
+    tail = [h for h in eng.report.history[-2:]]
+    assert all(cells == 0 for _, cells, _ in tail)
+
+
+@pytest.mark.parametrize("w", [4])
+def test_adaptive_vs_na_communication(w):
+    """Fig 13b/14b: cumulative communication flattens once AdHash adapts."""
+    d, triples = load_example()
+    q = prof_query(d)
+    na = AdHashEngine(triples, w, adaptive=False, capacity=256)
+    ad = AdHashEngine(triples, w, adaptive=True, frequency_threshold=3,
+                      capacity=256)
+    for _ in range(12):
+        na.query(q)
+        ad.query(q)
+    na_comm = na.report.comm_cells
+    ad_comm = ad.report.comm_cells + ad.report.ird_comm_cells
+    assert na_comm > 0
+    # adaptivity pays IRD once, then stops communicating
+    assert ad.report.comm_cells < na.report.comm_cells
+    assert ad_comm < na_comm
+
+
+def test_subject_star_runs_parallel_without_adaptivity():
+    d, triples = load_example()
+    eng = AdHashEngine(triples, 4, adaptive=False, capacity=256)
+    q = Query(
+        [
+            TriplePattern(v("s"), c(d, "advisor"), v("p")),
+            TriplePattern(v("s"), c(d, "uGradFrom"), v("u")),
+        ]
+    )
+    rel, st = eng.query(q)
+    assert st.mode == "parallel"
+    assert st.comm_cells == 0
+    assert set(map(tuple, rel.project_to(q.vars))) == match_query(triples, q)
+
+
+def test_replication_budget_eviction():
+    d, triples = load_example()
+    eng = AdHashEngine(
+        triples, 2, adaptive=True, frequency_threshold=2,
+        replication_budget=1, capacity=256,
+    )
+    q = prof_query(d)
+    for _ in range(5):
+        eng.query(q)
+    # budget of 1 replica triple per worker forces eviction
+    assert eng.report.n_evictions >= 1
+    assert eng.replicas.max_per_worker() <= 1 or eng.report.n_evictions > 0
+    # correctness never suffers
+    rel, _ = eng.query(q)
+    assert fig2_result(rel, q) == expected_fig2(d)
+
+
+def test_object_core_redistribution_correctness():
+    """Hot pattern whose core is an object: IRD must move/replicate triples
+    (the Lisa/Fred-cross-boundary example of §1)."""
+    d, triples = load_example()
+    for w in (2, 3):
+        eng = AdHashEngine(triples, w, adaptive=True, frequency_threshold=2,
+                           capacity=256)
+        q = prof_query(d)
+        ref = expected_fig2(d)
+        for _ in range(6):
+            rel, st = eng.query(q)
+            assert fig2_result(rel, q) == ref
+        assert eng.report.n_parallel_replica > 0
+        if w > 1:
+            assert eng.replication_ratio() >= 0.0
+
+
+def test_load_balance_report():
+    d, triples = load_example()
+    eng = AdHashEngine(triples, 4, adaptive=False)
+    lb = eng.load_balance()
+    assert lb["max"] >= lb["min"]
+    assert lb["replication_ratio"] == 0.0
+
+
+def test_three_hop_adaptive_chain():
+    """Deeper tree: 2-level IRD collocation (phase 2 of Algorithm 3)."""
+    rng = np.random.default_rng(7)
+    n_v, n_t = 60, 400
+    P0, P1, P2 = n_v, n_v + 1, n_v + 2
+    triples = np.unique(
+        np.stack(
+            [
+                rng.integers(0, n_v, n_t),
+                rng.integers(P0, P2 + 1, n_t),
+                rng.integers(0, n_v, n_t),
+            ],
+            axis=1,
+        ).astype(np.int64),
+        axis=0,
+    )
+    q = Query(
+        [
+            TriplePattern(Var("a"), Const(P0), Var("b")),
+            TriplePattern(Var("b"), Const(P1), Var("c")),
+            TriplePattern(Var("c"), Const(P2), Var("d")),
+        ]
+    )
+    ref = match_query(triples, q)
+    eng = AdHashEngine(triples, 4, adaptive=True, frequency_threshold=2,
+                       capacity=2048)
+    for i in range(5):
+        rel, st = eng.query(q)
+        got = set(map(tuple, rel.project_to(q.vars)))
+        assert got == ref, f"iteration {i}: {len(got)} vs {len(ref)}"
+    assert eng.report.n_parallel_replica >= 1

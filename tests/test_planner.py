@@ -1,0 +1,77 @@
+"""DP optimizer: cost model of §4.3, ordering choices of §4.1.1/§4.1.2."""
+from __future__ import annotations
+
+import pytest
+
+import repro.core  # noqa: F401
+from repro.core.planner import LocalityAwarePlanner
+from repro.core.query import Query, TriplePattern, Var
+from repro.core.stats import compute_stats
+
+from paper_example import c, load_example, prof_query, prof_query3, v
+
+
+@pytest.fixture()
+def env():
+    d, triples = load_example()
+    return d, triples, compute_stats(triples)
+
+
+def test_fig2_prefers_hash_distribution_order(env):
+    """§4.1.1: q2 |><| q1 hash-distributes instead of broadcasting, so the
+    planner must order q2 first."""
+    d, triples, gs = env
+    planner = LocalityAwarePlanner(gs, n_workers=4)
+    plan = planner.plan(prof_query(d))
+    assert plan.ordering[0] == 1, plan
+    assert plan.join_vars[0] == Var("prof")
+    assert not plan.parallel
+
+
+def test_qprof_avoids_double_communication(env):
+    """§4.1.2: ordering q2,q1,q3 leaves the q3 join communication-free."""
+    d, triples, gs = env
+    planner = LocalityAwarePlanner(gs, n_workers=4)
+    plan = planner.plan(prof_query3(d))
+    assert plan.ordering[0] == 1, plan
+    # q3 joins on ?stud = pinned subject -> free; it must come after q1
+    assert plan.ordering.index(2) == 2, plan
+
+
+def test_subject_star_plans_parallel(env):
+    d, triples, gs = env
+    q = Query(
+        [
+            TriplePattern(v("s"), c(d, "advisor"), v("p")),
+            TriplePattern(v("s"), c(d, "uGradFrom"), v("u")),
+            TriplePattern(v("s"), c(d, "type"), v("t")),
+        ]
+    )
+    plan = LocalityAwarePlanner(gs, n_workers=8).plan(q)
+    assert plan.parallel
+    assert plan.est_cost == 0.0
+
+
+def test_disconnected_query_raises(env):
+    d, triples, gs = env
+    q = Query(
+        [
+            TriplePattern(v("a"), c(d, "advisor"), v("b")),
+            TriplePattern(v("x"), c(d, "type"), v("y")),
+        ]
+    )
+    with pytest.raises(ValueError):
+        LocalityAwarePlanner(gs, n_workers=4).plan(q)
+
+
+def test_oracle_overrides_constant_cardinalities(env):
+    d, triples, gs = env
+    calls = []
+
+    def oracle(pat):
+        calls.append(pat)
+        return 1
+
+    q = prof_query(d)
+    LocalityAwarePlanner(gs, 4, count_oracle=oracle).plan(q)
+    assert calls  # q1 has constants -> the master consulted the workers

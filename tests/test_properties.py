@@ -1,0 +1,165 @@
+"""Property-based tests (hypothesis) for system invariants.
+
+Invariants checked against the brute-force oracle on random graphs/queries:
+  * distributed execution is exact for any ordering the planner emits,
+  * adaptivity never changes results (parallel-replica == distributed),
+  * partitioning is a total assignment; subject-locality holds,
+  * relational primitives: expand/compact/unique are exact vs numpy.
+"""
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+import repro.core  # noqa: F401
+import jax.numpy as jnp
+
+from repro.core.engine import AdHashEngine
+from repro.core.partition import hash_ids, partition_by_subject
+from repro.core.query import Const, Query, TriplePattern, Var
+from repro.core.relalg import bucket_by_dest, compact, expand, unique_compact
+from repro.core import dsj
+
+from reference import match_query
+
+_SETTINGS = dict(
+    deadline=None,
+    max_examples=12,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+@st.composite
+def graph_and_query(draw):
+    n_v = draw(st.integers(8, 24))
+    n_p = draw(st.integers(2, 4))
+    n_t = draw(st.integers(20, 120))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    triples = np.unique(
+        np.stack(
+            [
+                rng.integers(0, n_v, n_t),
+                n_v + rng.integers(0, n_p, n_t),
+                rng.integers(0, n_v, n_t),
+            ],
+            axis=1,
+        ).astype(np.int64),
+        axis=0,
+    )
+    # connected 2-3 pattern query over variables a,b,c
+    shape = draw(st.sampled_from(["chain2", "chain3", "star2", "oo2"]))
+    a, b, cv, dv = Var("a"), Var("b"), Var("c"), Var("d")
+    p = [Const(int(n_v + i % n_p)) for i in range(3)]
+    if shape == "chain2":
+        pats = [TriplePattern(a, p[0], b), TriplePattern(b, p[1], cv)]
+    elif shape == "chain3":
+        pats = [
+            TriplePattern(a, p[0], b),
+            TriplePattern(b, p[1], cv),
+            TriplePattern(cv, p[2], dv),
+        ]
+    elif shape == "star2":
+        pats = [TriplePattern(a, p[0], b), TriplePattern(a, p[1], cv)]
+    else:  # object-object join
+        pats = [TriplePattern(a, p[0], cv), TriplePattern(b, p[1], cv)]
+    return triples, Query(pats)
+
+
+@given(graph_and_query(), st.integers(1, 5))
+@settings(**_SETTINGS)
+def test_engine_matches_bruteforce(gq, w):
+    triples, q = gq
+    eng = AdHashEngine(triples, w, adaptive=False, capacity=2048)
+    rel, _ = eng.query(q)
+    got = set(map(tuple, rel.project_to(q.vars)))
+    assert got == match_query(triples, q)
+
+
+@given(graph_and_query())
+@settings(**_SETTINGS)
+def test_adaptivity_preserves_results(gq):
+    triples, q = gq
+    ref = match_query(triples, q)
+    eng = AdHashEngine(triples, 3, adaptive=True, frequency_threshold=2,
+                       capacity=2048)
+    for _ in range(4):
+        rel, _ = eng.query(q)
+        assert set(map(tuple, rel.project_to(q.vars))) == ref
+
+
+@given(st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=200),
+       st.integers(1, 16))
+@settings(**_SETTINGS)
+def test_partition_total_and_local(ids, w):
+    ids = np.array(ids, dtype=np.int64)
+    triples = np.stack([ids, ids * 0, ids * 0], axis=1)
+    assign = partition_by_subject(triples, w)
+    assert assign.min() >= 0 and assign.max() < w
+    # locality: same subject -> same worker
+    h = hash_ids(ids) % w
+    assert (assign == h).all()
+
+
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=64),
+       st.integers(1, 64))
+@settings(**_SETTINGS)
+def test_expand_matches_numpy(counts, cap):
+    counts = np.array(counts)
+    lo = np.zeros_like(counts)
+    hi = counts
+    left, pos, valid, total = expand(jnp.asarray(lo), jnp.asarray(hi), cap)
+    ref = [(i, j) for i, c in enumerate(counts) for j in range(c)][:cap]
+    got = [
+        (int(l), int(p))
+        for l, p, v in zip(left, pos, valid)
+        if bool(v)
+    ]
+    assert got == ref
+    assert int(total) == counts.sum()
+
+
+@given(st.lists(st.integers(-5, 5), min_size=1, max_size=64),
+       st.integers(1, 64))
+@settings(**_SETTINGS)
+def test_unique_compact_matches_numpy(vals, cap):
+    v = np.array(vals, dtype=np.int32)
+    valid = v >= 0
+    uniq, mask, n = unique_compact(
+        jnp.asarray(v), jnp.asarray(valid), cap, 2**31 - 1
+    )
+    ref = np.unique(v[valid])
+    got = np.asarray(uniq)[np.asarray(mask)]
+    assert int(n) == len(ref)
+    np.testing.assert_array_equal(got, ref[:cap])
+
+
+@given(
+    st.lists(st.integers(0, 2**20), min_size=1, max_size=64),
+    st.integers(2, 8),
+)
+@settings(**_SETTINGS)
+def test_bucket_by_dest_routes_everything(vals, w):
+    v = np.array(vals, dtype=np.int32)
+    dest = (hash_ids(v.astype(np.int64)) % w).astype(np.int32)
+    send, svalid, maxw = bucket_by_dest(
+        jnp.asarray(v)[:, None], jnp.asarray(dest), jnp.ones(len(v), bool),
+        w, cap_peer=len(v),
+    )
+    send = np.asarray(send)[..., 0]
+    svalid = np.asarray(svalid)
+    # every value lands in exactly the bucket of its destination
+    for d in range(w):
+        got = sorted(send[d][svalid[d]].tolist())
+        ref = sorted(v[dest == d].tolist())
+        assert got == ref
+    assert int(maxw) <= len(v)
+
+
+@given(st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=100))
+@settings(**_SETTINGS)
+def test_jnp_hash_matches_numpy_hash(ids):
+    a = np.array(ids, dtype=np.int64)
+    np_h = hash_ids(a)
+    j_h = np.asarray(dsj.jnp_hash_ids(jnp.asarray(a)))
+    np.testing.assert_array_equal(np_h, j_h)

@@ -1,0 +1,129 @@
+"""Vertex scores, core selection, Algorithm 2, heat map, Boyer-Moore."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401
+from repro.core.heatmap import BoyerMoore, HeatMap
+from repro.core.query import Const, Query, TriplePattern, Var
+from repro.core.stats import compute_stats
+from repro.core.transform import (
+    build_redistribution_tree,
+    select_core,
+    vertex_scores,
+)
+
+from paper_example import c, load_example, prof_query, v
+
+
+def test_fig4_statistics():
+    """Figure 4: advisor has |p|=4, |p.s|=3, |p.o|=2, pS=8/3, pO=5."""
+    d, triples = load_example()
+    st = compute_stats(triples).get(d.lookup("advisor"))
+    assert st.card == 4
+    assert st.n_subj == 3
+    assert st.n_obj == 2
+    assert st.subj_score == pytest.approx((1 + 3 + 4) / 3)
+    assert st.obj_score == pytest.approx((6 + 4) / 2)
+    assert st.pps == pytest.approx(4 / 3)
+
+
+def test_fig7_core_selection():
+    """§5.1/Fig 7 pattern: ?stud -uGradFrom-> ?univ <-gradFrom- ?prof,
+    ?stud -advisor-> ?prof (cycle).  The core maximizes the vertex score."""
+    d, triples = load_example()
+    gs = compute_stats(triples)
+    q = Query(
+        [
+            TriplePattern(v("stud"), c(d, "uGradFrom"), v("univ")),
+            TriplePattern(v("prof"), c(d, "gradFrom"), v("univ")),
+            TriplePattern(v("stud"), c(d, "advisor"), v("prof")),
+        ]
+    )
+    scores = vertex_scores(q, gs)
+    core = select_core(q, gs)
+    assert scores[core] == max(scores[t] for t in scores if isinstance(t, Var))
+    tree = build_redistribution_tree(q, gs)
+    # spans every edge exactly once, cycle broken by duplication
+    assert tree.n_edges() == 3
+    # every path starts at the core
+    for path in tree.paths():
+        assert path[0][0].term == core
+    # cycle breaking duplicates a vertex: 3 edges on 3 query vertices needs
+    # 4 tree nodes
+    nodes = set()
+
+    def count(n):
+        nodes.add(n.uid)
+        for e in n.children:
+            count(e.child)
+
+    count(tree.root)
+    assert len(nodes) == 4
+
+
+def test_tree_qdegree_and_lowhigh_heuristics():
+    d, triples = load_example()
+    gs = compute_stats(triples)
+    q = prof_query(d)
+    for h in ("high_low", "low_high", "qdegree"):
+        tree = build_redistribution_tree(q, gs, heuristic=h)
+        assert tree.n_edges() == len(q.patterns)
+
+
+def test_boyer_moore_majority():
+    bm = BoyerMoore()
+    for x in [1, 2, 1, 1, 3, 1, 1]:
+        bm.update(x)
+    assert bm.majority() == 1
+    bm2 = BoyerMoore()
+    for x in [1, 2, 3, 1, 2, 3]:
+        bm2.update(x)
+    assert bm2.majority() is None  # no strict majority
+
+
+def test_heatmap_insert_and_hot_detection():
+    d, triples = load_example()
+    gs = compute_stats(triples)
+    q = prof_query(d)
+    hm = HeatMap()
+    for _ in range(9):
+        hm.insert(build_redistribution_tree(q, gs))
+    assert hm.hot_patterns(threshold=10) == []
+    hm.insert(build_redistribution_tree(q, gs))
+    hot = hm.hot_patterns(threshold=10)
+    assert len(hot) >= 1
+    # dominant constant CS is substituted back into the hot pattern (§5.4)
+    all_terms = [
+        t
+        for hp in hot
+        for pat in hp.query.patterns
+        for t in (pat.s, pat.p, pat.o)
+    ]
+    assert Const(d.lookup("CS")) in all_terms
+    # total hot edges cover the whole query
+    assert sum(hp.rtree.n_edges() for hp in hot) == len(q.patterns)
+
+
+def test_heatmap_no_dominant_constant():
+    """Alternating constants must NOT be substituted (no strict majority)."""
+    d, triples = load_example()
+    gs = compute_stats(triples)
+    qa = Query([TriplePattern(v("s"), c(d, "advisor"), c(d, "Bill"))])
+    qb = Query([TriplePattern(v("s"), c(d, "advisor"), c(d, "James"))])
+    hm = HeatMap()
+    for _ in range(6):
+        hm.insert(build_redistribution_tree(qa, gs))
+        hm.insert(build_redistribution_tree(qb, gs))
+    hot = hm.hot_patterns(threshold=10)
+    assert hot
+    for hp in hot:
+        for pat in hp.query.patterns:
+            assert not (
+                isinstance(pat.o, Const)
+                and pat.o.id in (d.lookup("Bill"), d.lookup("James"))
+            ) and not (
+                isinstance(pat.s, Const)
+                and pat.s.id in (d.lookup("Bill"), d.lookup("James"))
+            )
