@@ -20,6 +20,7 @@ def main() -> None:
         bench_balance,
         bench_heuristics,
         bench_partition,
+        bench_probe,
         bench_queries,
         bench_startup,
     )
@@ -29,6 +30,7 @@ def main() -> None:
     for mod in (
         bench_partition,
         bench_startup,
+        bench_probe,
         bench_queries,
         bench_adaptivity,
         bench_heuristics,

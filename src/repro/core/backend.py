@@ -1,0 +1,149 @@
+"""Probe-backend dispatch + static-capacity classes (DSJ hot-loop plumbing).
+
+Every index probe in the DSJ data plane is a vectorized sorted search: given
+a worker's sorted composite-key array, find the match range of a block of
+probe keys.  This module is the single place that decides *how* that search
+runs:
+
+  ``searchsorted``  plain ``jnp.searchsorted`` binary search — the default on
+                    CPU/GPU, where data-dependent gathers are cheap.
+  ``pallas``        the masked-compare Pallas kernel (paper §4.1 hot loop,
+                    ``repro.kernels.semijoin``) — the default on TPU, where
+                    the VPU prefers O(N) compares over O(log N) gathers.
+                    Off-TPU the kernel runs in interpret mode (tests/parity).
+  ``auto``          resolved once per process to one of the two above.
+
+The second half of the module is the static-shape discipline that keeps the
+jit cache warm: every dynamic capacity (planner hints, retry doubling, user
+capacities) is quantized to a power-of-two class via ``quantize_capacity``,
+so repeated queries of the same shape reuse compiled stages instead of
+triggering a per-query recompilation storm.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "PROBE_BACKENDS",
+    "default_backend",
+    "resolve_backend",
+    "range_search",
+    "span_search",
+    "quantize_capacity",
+    "probe_compile_cache_size",
+]
+
+PROBE_BACKENDS = ("searchsorted", "pallas")
+
+
+# ---------------------------------------------------------------- resolution
+def default_backend() -> str:
+    """Platform-detected probe backend: Pallas on TPU, searchsorted elsewhere."""
+    return "pallas" if jax.default_backend() == "tpu" else "searchsorted"
+
+
+def resolve_backend(name: str | None) -> str:
+    """Resolve 'auto'/None to a concrete backend and validate the name.
+
+    Resolving happens host-side, once, so the concrete name is what reaches
+    the jitted stages as a static argument (stable jit cache keys)."""
+    if name is None or name == "auto":
+        return default_backend()
+    if name not in PROBE_BACKENDS:
+        raise ValueError(
+            f"unknown probe backend {name!r}; expected one of "
+            f"{PROBE_BACKENDS + ('auto',)}"
+        )
+    return name
+
+
+# ------------------------------------------------------------------- probes
+# Below this many probe keys the O(N) masked-compare kernel cannot beat two
+# binary searches (a scalar oracle probe would scan the whole shard), so tiny
+# probe blocks stay on searchsorted on every backend.  Static shapes make the
+# choice trace-time; results are identical either way.
+_MIN_PALLAS_PROBES = 16
+
+
+def _pallas_probe(keys: jax.Array, probes: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    from repro.kernels.semijoin.semijoin import semijoin_probe
+
+    return semijoin_probe(keys, probes)
+
+
+def range_search(
+    keys: jax.Array,  # (N,) sorted, max-padded
+    probes: jax.Array,  # (M,)
+    backend: str = "searchsorted",
+) -> tuple[jax.Array, jax.Array]:
+    """Match range [lo, hi) of each probe key: side-left / side-right
+    ``searchsorted`` — the canonical semi-join probe op.  Both int32."""
+    if backend == "pallas" and probes.shape[0] >= _MIN_PALLAS_PROBES:
+        return _pallas_probe(keys, probes)
+    lo = jnp.searchsorted(keys, probes, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(keys, probes, side="right").astype(jnp.int32)
+    return lo, hi
+
+
+def span_search(
+    keys: jax.Array,  # (N,) sorted, max-padded
+    lo_keys: jax.Array,  # (M,)
+    hi_keys: jax.Array,  # (M,)
+    backend: str = "searchsorted",
+) -> tuple[jax.Array, jax.Array]:
+    """Side-left insertion points of two probe arrays at once — the
+    [lo_key, hi_key) composite-key span form used by range scans (P-index
+    ranges, variable predicates)."""
+    if backend == "pallas" and lo_keys.shape[0] >= _MIN_PALLAS_PROBES:
+        m = lo_keys.shape[0]
+        lo_both, _ = _pallas_probe(keys, jnp.concatenate([lo_keys, hi_keys]))
+        return lo_both[:m], lo_both[m:]
+    lo = jnp.searchsorted(keys, lo_keys, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(keys, hi_keys, side="left").astype(jnp.int32)
+    return lo, hi
+
+
+# ------------------------------------------------------- capacity quantizing
+def quantize_capacity(n: int | float, floor: int = 64,
+                      ceil: int | None = None) -> int:
+    """Round a capacity up to its power-of-two class (min ``floor``).
+
+    Static shapes bake capacities into jit cache keys; arbitrary per-query
+    capacities (e.g. ``2 * estimated_cardinality``) would recompile every
+    stage on every query.  Power-of-two classes collapse the key space so a
+    warm workload reuses compiled stages.  ``ceil`` (optional, also a power
+    of two) caps planner *hints* only — retry doubling must stay unbounded
+    or overflow recovery would live-lock."""
+    n = max(int(n), floor, 1)
+    q = 1 << (n - 1).bit_length()
+    if ceil is not None:
+        q = min(q, ceil)
+    return q
+
+
+# ------------------------------------------------------------- observability
+def probe_compile_cache_size() -> int:
+    """Total jit-cache entries across the DSJ data-plane stages.
+
+    Used by the recompilation regression test and ``bench_probe``: after
+    warmup, repeated same-shape queries must not grow this number."""
+    from . import dsj, triples
+
+    fns = (
+        triples.match_ranges,
+        triples.probe_values,
+        triples.gather_rows,
+        dsj.match_rows,
+        dsj.match_first,
+        dsj.project_unique,
+        dsj.exchange_hash,
+        dsj.exchange_broadcast,
+        dsj.probe_and_reply,
+        dsj.finalize_join,
+        dsj.local_probe_join,
+    )
+    # _cache_size is a private jit API with no stability guarantee; degrade
+    # to 0 (metric unavailable) rather than crash on a jax version bump
+    return sum(getattr(f, "_cache_size", lambda: 0)() for f in fns)

@@ -23,6 +23,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from .backend import range_search
 from .query import O, P, S, TriplePattern, Var
 from .relalg import bucket_by_dest, expand, unique_compact
 from .relation import Relation
@@ -96,12 +97,13 @@ def _residual_mask(rows: jax.Array, valid: jax.Array, spec: PatternSpec,
 
 
 # ---------------------------------------------------------------- first match
-@partial(jax.jit, static_argnames=("spec", "cap_out"))
+@partial(jax.jit, static_argnames=("spec", "cap_out", "backend"))
 def match_rows(
     store: ShardedTripleStore,
     consts: jax.Array,  # (3,) int32, -1 = variable
     spec: PatternSpec,
     cap_out: int,
+    backend: str = "searchsorted",
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Local pattern match returning full triple rows (used by IRD).
 
@@ -109,19 +111,19 @@ def match_rows(
     if spec.p_const and spec.s_const:
         use_po, probed = False, (P, S)
         lo, hi = match_ranges(store, consts[P], consts[S], use_po=False,
-                              nid=store.n_ids)
+                              nid=store.n_ids, backend=backend)
     elif spec.p_const and spec.o_const:
         use_po, probed = True, (P, O)
         lo, hi = match_ranges(store, consts[P], consts[O], use_po=True,
-                              nid=store.n_ids)
+                              nid=store.n_ids, backend=backend)
     elif spec.p_const:
         use_po, probed = False, (P,)
         lo, hi = match_ranges(store, consts[P], jnp.int32(-1), use_po=False,
-                              nid=store.n_ids)
+                              nid=store.n_ids, backend=backend)
     else:
         use_po, probed = False, ()
         lo, hi = match_ranges(store, jnp.int32(-1), jnp.int32(-1), use_po=False,
-                              nid=store.n_ids)
+                              nid=store.n_ids, backend=backend)
     rows, _, valid, totals = gather_rows(
         store, lo[:, None], hi[:, None], cap_out, use_po=use_po
     )
@@ -129,19 +131,21 @@ def match_rows(
     return rows, valid, jnp.max(totals)
 
 
-@partial(jax.jit, static_argnames=("spec", "cap_out"))
+@partial(jax.jit, static_argnames=("spec", "cap_out", "backend"))
 def match_first(
     store: ShardedTripleStore,
     consts: jax.Array,  # (3,) int32, -1 = variable
     spec: PatternSpec,
     cap_out: int,
+    backend: str = "searchsorted",
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """answerSubquery(q) on local shards (Algorithm 1 line 10).
 
     Returns (cols (W, cap_out, k), valid (W, cap_out), max_total (scalar)).
     Index selection mirrors §3.2: (p,s)->PS, (p,o)->PO, (p)->P, else scan.
     """
-    rows, valid, max_total = match_rows(store, consts, spec, cap_out)
+    rows, valid, max_total = match_rows(store, consts, spec, cap_out,
+                                        backend=backend)
     cols = rows[..., list(spec.var_cols)] if spec.var_cols else rows[..., :0]
     cols = jnp.where(valid[..., None], cols, -1)
     return cols, valid, max_total
@@ -212,7 +216,8 @@ def exchange_broadcast(
 
 
 # -------------------------------------------------------------- probe + reply
-@partial(jax.jit, static_argnames=("spec", "probe_col", "cap_flat", "cap_cand"))
+@partial(jax.jit, static_argnames=("spec", "probe_col", "cap_flat", "cap_cand",
+                                   "backend"))
 def probe_and_reply(
     store: ShardedTripleStore,
     recv: jax.Array,  # (W, W_send, cap_peer) received join-column values
@@ -222,6 +227,7 @@ def probe_and_reply(
     probe_col: int,  # S, P or O — the column the values bind (c2)
     cap_flat: int,  # probe expansion capacity (this worker, all senders)
     cap_cand: int,  # per-(replier, sender) candidate capacity
+    backend: str = "searchsorted",
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Each worker semi-joins the received values against its local index and
     routes candidate triples back to their senders (Algorithm 1 lines 13-23).
@@ -232,7 +238,8 @@ def probe_and_reply(
     flat_vals = recv.reshape(w, n_send * cap_peer)
     flat_valid = recv_valid.reshape(w, n_send * cap_peer)
     lo, hi = probe_values(
-        store, consts[P], flat_vals, flat_valid, col=probe_col, nid=store.n_ids
+        store, consts[P], flat_vals, flat_valid, col=probe_col,
+        nid=store.n_ids, backend=backend,
     )
     rows, src, valid, totals = gather_rows(
         store, lo, hi, cap_flat, use_po=(probe_col == O)
@@ -254,7 +261,8 @@ def probe_and_reply(
 
 # ------------------------------------------------------------------- finalize
 @partial(jax.jit, static_argnames=("join_col_rel", "probe_col",
-                                   "shared_checks", "append_cols", "cap_out"))
+                                   "shared_checks", "append_cols", "cap_out",
+                                   "backend"))
 def finalize_join(
     rel_cols: jax.Array,  # (W, capR, k) current intermediate RS1
     rel_valid: jax.Array,
@@ -266,6 +274,7 @@ def finalize_join(
     shared_checks: tuple[tuple[int, int], ...],
     append_cols: tuple[int, ...],  # triple columns to append (new variables)
     cap_out: int,
+    backend: str = "searchsorted",
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """RS1 |><| candidates on RS1.c1 = cand.c2 (local hash join, line 27).
 
@@ -281,8 +290,7 @@ def finalize_join(
         skey = key[order]
         scand = cnd[order]
         probe = jnp.where(rvalid, rcols[:, join_col_rel], I32MAX)
-        lo = jnp.searchsorted(skey, probe, side="left").astype(jnp.int32)
-        hi = jnp.searchsorted(skey, probe + 1, side="left").astype(jnp.int32)
+        lo, hi = range_search(skey, probe, backend=backend)
         hi = jnp.where(rvalid & (probe != I32MAX), hi, lo)
         left, pos, valid, total = expand(lo, hi, cap_out)
         ltuple = rcols[left]
@@ -306,7 +314,8 @@ def finalize_join(
 
 # ----------------------------------------------------- case (i): no-comm join
 @partial(jax.jit, static_argnames=("spec", "join_col_rel", "probe_col",
-                                   "shared_checks", "append_cols", "cap_out"))
+                                   "shared_checks", "append_cols", "cap_out",
+                                   "backend"))
 def local_probe_join(
     store: ShardedTripleStore,
     rel_cols: jax.Array,  # (W, capR, k)
@@ -318,12 +327,14 @@ def local_probe_join(
     shared_checks: tuple[tuple[int, int], ...],
     append_cols: tuple[int, ...],
     cap_out: int,
+    backend: str = "searchsorted",
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """JoinWithoutCommunication (Algorithm 1 line 7): c2 = pinned subject, so
     every matching triple is already local.  Probe own index directly."""
     vals = rel_cols[:, :, join_col_rel]
     lo, hi = probe_values(
-        store, consts[P], vals, rel_valid, col=probe_col, nid=store.n_ids
+        store, consts[P], vals, rel_valid, col=probe_col, nid=store.n_ids,
+        backend=backend,
     )
     rows, src, valid, totals = gather_rows(
         store, lo, hi, cap_out, use_po=(probe_col == O)

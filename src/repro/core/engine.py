@@ -21,6 +21,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from .backend import quantize_capacity, resolve_backend
 from .dictionary import Dictionary
 from .executor import Executor, QueryStats
 from .heatmap import HeatMap
@@ -73,6 +74,7 @@ class AdHashEngine:
         pinned_opt: bool = True,
         capacity: int = 1 << 12,
         use_count_oracle: bool = True,
+        probe_backend: str = "auto",
     ):
         t0 = time.perf_counter()
         triples = np.asarray(triples)
@@ -82,7 +84,10 @@ class AdHashEngine:
         self.threshold = frequency_threshold
         self.budget = replication_budget
         self.heuristic = heuristic
-        self.capacity = capacity
+        self.capacity = quantize_capacity(capacity)
+        # one concrete probe backend per engine: searchsorted binary search
+        # or the Pallas masked-compare kernel ('auto' = platform default)
+        self.probe_backend = resolve_backend(probe_backend)
 
         # --- bootstrap (paper §3.4): partition, load, collect statistics
         self.n_ids = int(triples.max()) + 1 if triples.size else 1
@@ -95,16 +100,19 @@ class AdHashEngine:
         oracle = self._count_pattern if use_count_oracle else None
         self.planner = LocalityAwarePlanner(self.stats, n_workers, oracle)
         self.executor = Executor(
-            self.store, n_workers, locality_aware, pinned_opt
+            self.store, n_workers, locality_aware, pinned_opt,
+            probe_backend=self.probe_backend,
         )
         self.heatmap = HeatMap()
         self.pattern_index = PatternIndex()
         self.replicas = ReplicaIndex(n_workers)
         self.parallel_exec = ParallelExecutor(
-            self.store, self.replicas, n_workers
+            self.store, self.replicas, n_workers,
+            probe_backend=self.probe_backend,
         )
         self.ird = IncrementalRedistributor(
-            self.store, self.replicas, n_workers, capacity
+            self.store, self.replicas, n_workers, self.capacity,
+            probe_backend=self.probe_backend,
         )
         self._no_redistribute: set = set()
         self.report = EngineReport()
@@ -119,18 +127,19 @@ class AdHashEngine:
 
         spec = dsj.PatternSpec.of(q)
         consts = dsj.pattern_consts(q)
+        be = self.probe_backend
         if spec.p_const and spec.s_const:
             lo, hi = match_ranges(self.store, consts[1], consts[0],
-                                  use_po=False, nid=self.n_ids)
+                                  use_po=False, nid=self.n_ids, backend=be)
         elif spec.p_const and spec.o_const:
             lo, hi = match_ranges(self.store, consts[1], consts[2],
-                                  use_po=True, nid=self.n_ids)
+                                  use_po=True, nid=self.n_ids, backend=be)
         elif spec.p_const:
             lo, hi = match_ranges(self.store, consts[1], jnp.int32(-1),
-                                  use_po=False, nid=self.n_ids)
+                                  use_po=False, nid=self.n_ids, backend=be)
         else:
             lo, hi = match_ranges(self.store, jnp.int32(-1), jnp.int32(-1),
-                                  use_po=False, nid=self.n_ids)
+                                  use_po=False, nid=self.n_ids, backend=be)
         return int(jnp.sum(hi - lo))
 
     # ------------------------------------------------------------------ query

@@ -20,6 +20,7 @@ from dataclasses import dataclass, field
 import jax.numpy as jnp
 
 from . import dsj
+from .backend import quantize_capacity, resolve_backend
 from .query import O, P, S, Query, TriplePattern, Var
 from .relation import Relation
 from .triples import ShardedTripleStore
@@ -78,6 +79,10 @@ class Executor:
                                (disables Observation 1 hash distribution)
       pinned_opt=False      -> joins on the pinned subject still run as
                                synchronized DSJs (disables Observation 2)
+
+    ``probe_backend`` selects how index probes run ('searchsorted', 'pallas'
+    or 'auto' — see repro.core.backend); all capacities are quantized to
+    power-of-two classes so same-shape queries share compiled stages.
     """
 
     def __init__(
@@ -86,11 +91,13 @@ class Executor:
         n_workers: int,
         locality_aware: bool = True,
         pinned_opt: bool = True,
+        probe_backend: str = "auto",
     ):
         self.store = store
         self.w = n_workers
         self.locality_aware = locality_aware
         self.pinned_opt = pinned_opt
+        self.backend = resolve_backend(probe_backend)
 
     # ------------------------------------------------------------ first match
     def _match_first(self, q: TriplePattern, cap: int, stats: QueryStats
@@ -98,7 +105,8 @@ class Executor:
         spec = dsj.PatternSpec.of(q)
         consts = dsj.pattern_consts(q)
         for _ in range(_MAX_RETRIES):
-            cols, valid, total = dsj.match_first(self.store, consts, spec, cap)
+            cols, valid, total = dsj.match_first(self.store, consts, spec, cap,
+                                                 backend=self.backend)
             if int(total) <= cap:
                 # keep one column per distinct variable (handles ?x p ?x)
                 vc = q.var_cols()
@@ -112,7 +120,7 @@ class Executor:
                 if len(keep) != len(vc):
                     cols = cols[..., keep]
                 return Relation(cols, valid, vars_)
-            cap = max(cap * 2, int(total))
+            cap = quantize_capacity(max(cap * 2, int(total)))
             stats.n_retries += 1
         raise ExecutorError("match_first exceeded retry budget")
 
@@ -146,11 +154,11 @@ class Executor:
             for _ in range(_MAX_RETRIES):
                 cols, valid, total = dsj.local_probe_join(
                     self.store, rel.cols, rel.valid, consts, spec,
-                    c1, c2, checks, append_cols, cap,
+                    c1, c2, checks, append_cols, cap, backend=self.backend,
                 )
                 if int(total) <= cap:
                     return Relation(cols, valid, out_vars)
-                cap = max(cap * 2, int(total))
+                cap = quantize_capacity(max(cap * 2, int(total)))
                 stats.n_retries += 1
             raise ExecutorError("local join exceeded retry budget")
 
@@ -160,14 +168,14 @@ class Executor:
         stats.plan.append(
             f"dsj[{'hash' if hash_mode else 'bcast'}] on {join_var}"
         )
-        cap_proj = max(cap, 64)
+        cap_proj = quantize_capacity(cap)
         for _ in range(_MAX_RETRIES):
             proj, pvalid, nuniq = dsj.project_unique(
                 rel.cols, rel.valid, c1, cap_proj
             )
             if int(nuniq) <= cap_proj:
                 break
-            cap_proj = max(cap_proj * 2, int(nuniq))
+            cap_proj = quantize_capacity(max(cap_proj * 2, int(nuniq)))
             stats.n_retries += 1
         else:
             raise ExecutorError("projection exceeded retry budget")
@@ -180,7 +188,7 @@ class Executor:
                 )
                 if int(maxb) <= cap_peer:
                     break
-                cap_peer = max(cap_peer * 2, int(maxb))
+                cap_peer = quantize_capacity(max(cap_peer * 2, int(maxb)))
                 stats.n_retries += 1
             else:
                 raise ExecutorError("hash exchange exceeded retry budget")
@@ -189,17 +197,18 @@ class Executor:
             recv, rvalid, cells = dsj.exchange_broadcast(proj, pvalid)
             stats.comm_cells += int(cells)
 
-        cap_flat, cap_cand = max(cap, 64), max(cap, 64)
+        cap_flat = cap_cand = quantize_capacity(cap)
         for _ in range(_MAX_RETRIES):
             cand, cvalid, cells, maxf, maxc = dsj.probe_and_reply(
-                self.store, recv, rvalid, consts, spec, c2, cap_flat, cap_cand
+                self.store, recv, rvalid, consts, spec, c2, cap_flat, cap_cand,
+                backend=self.backend,
             )
             if int(maxf) <= cap_flat and int(maxc) <= cap_cand:
                 break
             if int(maxf) > cap_flat:
-                cap_flat = max(cap_flat * 2, int(maxf))
+                cap_flat = quantize_capacity(max(cap_flat * 2, int(maxf)))
             if int(maxc) > cap_cand:
-                cap_cand = max(cap_cand * 2, int(maxc))
+                cap_cand = quantize_capacity(max(cap_cand * 2, int(maxc)))
             stats.n_retries += 1
         else:
             raise ExecutorError("probe/reply exceeded retry budget")
@@ -208,11 +217,11 @@ class Executor:
         for _ in range(_MAX_RETRIES):
             cols, valid, total = dsj.finalize_join(
                 rel.cols, rel.valid, cand, cvalid, c1, c2, checks,
-                append_cols, cap,
+                append_cols, cap, backend=self.backend,
             )
             if int(total) <= cap:
                 return Relation(cols, valid, out_vars)
-            cap = max(cap * 2, int(total))
+            cap = quantize_capacity(max(cap * 2, int(total)))
             stats.n_retries += 1
         raise ExecutorError("finalize exceeded retry budget")
 
@@ -230,7 +239,7 @@ class Executor:
         ordering[i+1] into the running intermediate result).
         """
         stats = QueryStats()
-        cap = capacity or query.capacity
+        cap = quantize_capacity(capacity or query.capacity)
         q1 = query.patterns[ordering[0]]
         rel = self._match_first(q1, cap, stats)
         pinned = q1.s if isinstance(q1.s, Var) else None

@@ -26,6 +26,7 @@ from dataclasses import dataclass, field
 import jax.numpy as jnp
 
 from . import dsj
+from .backend import quantize_capacity, resolve_backend
 from .heatmap import HotPattern
 from .pattern_index import ReplicaIndex
 from .query import O, S, TriplePattern, Var
@@ -55,11 +56,13 @@ class IncrementalRedistributor:
         replicas: ReplicaIndex,
         n_workers: int,
         capacity: int = 1 << 12,
+        probe_backend: str = "auto",
     ):
         self.main = main
         self.replicas = replicas
         self.w = n_workers
-        self.cap = capacity
+        self.cap = quantize_capacity(capacity)
+        self.backend = resolve_backend(probe_backend)
 
     # ------------------------------------------------------------- top level
     def redistribute(self, hot: HotPattern) -> tuple[dict[int, str | None], IRDStats]:
@@ -113,10 +116,11 @@ class IncrementalRedistributor:
         consts = dsj.pattern_consts(q)
         cap = self.cap
         for _ in range(_MAX_RETRIES):
-            _, valid, total = dsj.match_rows(self.main, consts, spec, cap)
+            _, valid, total = dsj.match_rows(self.main, consts, spec, cap,
+                                             backend=self.backend)
             if int(total) <= cap:
                 return int(jnp.sum(valid))
-            cap = max(cap * 2, int(total))
+            cap = quantize_capacity(max(cap * 2, int(total)))
         return int(jnp.sum(valid))
 
     # ----------------------------------------------------------- phase 1
@@ -128,10 +132,11 @@ class IncrementalRedistributor:
         consts = dsj.pattern_consts(q)
         cap = self.cap
         for _ in range(_MAX_RETRIES):
-            rows, valid, total = dsj.match_rows(self.main, consts, spec, cap)
+            rows, valid, total = dsj.match_rows(self.main, consts, spec, cap,
+                                                backend=self.backend)
             if int(total) <= cap:
                 break
-            cap = max(cap * 2, int(total))
+            cap = quantize_capacity(max(cap * 2, int(total)))
         import jax
 
         w = self.w
@@ -147,7 +152,9 @@ class IncrementalRedistributor:
             send, svalid, maxw = jax.vmap(per_worker)(rows, valid)
             if int(jnp.max(maxw)) <= cap_peer:
                 break
-            cap_peer = cap = max(cap_peer * 2, int(jnp.max(maxw)))
+            cap_peer = cap = quantize_capacity(
+                max(cap_peer * 2, int(jnp.max(maxw)))
+            )
         recv = jnp.swapaxes(send, 0, 1).reshape(self.w, -1, 3)
         rvalid = jnp.swapaxes(svalid, 0, 1).reshape(self.w, -1)
         diag = jnp.sum(svalid[jnp.arange(w), jnp.arange(w)])
@@ -175,10 +182,11 @@ class IncrementalRedistributor:
         pconsts = dsj.pattern_consts(parent_q)
         cap = self.cap
         for _ in range(_MAX_RETRIES):
-            prows, pvalid, total = dsj.match_rows(pstore, pconsts, pspec, cap)
+            prows, pvalid, total = dsj.match_rows(pstore, pconsts, pspec, cap,
+                                                  backend=self.backend)
             if int(total) <= cap:
                 break
-            cap = max(cap * 2, int(total))
+            cap = quantize_capacity(max(cap * 2, int(total)))
 
         # project + dedupe the propagating column
         cap_proj = cap
@@ -188,7 +196,7 @@ class IncrementalRedistributor:
             )
             if int(nuniq) <= cap_proj:
                 break
-            cap_proj = max(cap_proj * 2, int(nuniq))
+            cap_proj = quantize_capacity(max(cap_proj * 2, int(nuniq)))
 
         # source column of the child edge: where the parent vertex binds
         src_col = S if edge.parent_is_subject else O
@@ -200,7 +208,7 @@ class IncrementalRedistributor:
                 )
                 if int(maxb) <= cap_peer:
                     break
-                cap_peer = max(cap_peer * 2, int(maxb))
+                cap_peer = quantize_capacity(max(cap_peer * 2, int(maxb)))
             stats.comm_cells += int(cells)
         else:
             recv, rvalid, cells = dsj.exchange_broadcast(proj, projv)
@@ -212,14 +220,14 @@ class IncrementalRedistributor:
         for _ in range(_MAX_RETRIES):
             cand, cvalid, cells, maxf, maxc = dsj.probe_and_reply(
                 self.main, recv, rvalid, consts, spec, src_col,
-                cap_flat, cap_cand,
+                cap_flat, cap_cand, backend=self.backend,
             )
             if int(maxf) <= cap_flat and int(maxc) <= cap_cand:
                 break
             if int(maxf) > cap_flat:
-                cap_flat = max(cap_flat * 2, int(maxf))
+                cap_flat = quantize_capacity(max(cap_flat * 2, int(maxf)))
             if int(maxc) > cap_cand:
-                cap_cand = max(cap_cand * 2, int(maxc))
+                cap_cand = quantize_capacity(max(cap_cand * 2, int(maxc)))
         stats.comm_cells += int(cells)
 
         flat = cand.reshape(self.w, -1, 3)

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import dsj
+from .backend import quantize_capacity, resolve_backend
 from .executor import ExecutorError, QueryStats, _append_plan, _shared_checks
 from .heatmap import EdgeKey
 from .query import Const, O, Query, S, Term, TriplePattern, Var
@@ -206,10 +207,12 @@ class ParallelExecutor:
         main: ShardedTripleStore,
         replicas: ReplicaIndex,
         n_workers: int,
+        probe_backend: str = "auto",
     ):
         self.main = main
         self.replicas = replicas
         self.w = n_workers
+        self.backend = resolve_backend(probe_backend)
 
     def _store_for(self, qedge: TreeEdge, pie: PIEdge, depth: int
                    ) -> ShardedTripleStore:
@@ -226,6 +229,7 @@ class ParallelExecutor:
         capacity: int = 1 << 12,
     ) -> tuple[Relation, QueryStats]:
         stats = QueryStats(mode="parallel-replica")
+        capacity = quantize_capacity(capacity)
         pie_of = {id(qe): pie for qe, pie in matches}
         query = tree.query
         edges = tree.iter_edges()  # DFS pre-order: parents precede children
@@ -262,7 +266,8 @@ class ParallelExecutor:
     # ------------------------------------------------------------- internals
     def _first(self, store, q, spec, consts, cap, stats) -> Relation:
         for _ in range(_MAX_RETRIES):
-            cols, valid, total = dsj.match_first(store, consts, spec, cap)
+            cols, valid, total = dsj.match_first(store, consts, spec, cap,
+                                                 backend=self.backend)
             if int(total) <= cap:
                 vars_ = []
                 keep = []
@@ -273,7 +278,7 @@ class ParallelExecutor:
                 if len(keep) != len(q.var_cols()):
                     cols = cols[..., keep]
                 return Relation(cols, valid, tuple(vars_))
-            cap = max(cap * 2, int(total))
+            cap = quantize_capacity(max(cap * 2, int(total)))
             stats.n_retries += 1
         raise ExecutorError("parallel first match exceeded retries")
 
@@ -286,11 +291,11 @@ class ParallelExecutor:
         for _ in range(_MAX_RETRIES):
             cols, valid, total = dsj.local_probe_join(
                 store, rel.cols, rel.valid, consts, spec, c1, probe_col,
-                checks, append_cols, cap,
+                checks, append_cols, cap, backend=self.backend,
             )
             if int(total) <= cap:
                 return Relation(cols, valid, out_vars)
-            cap = max(cap * 2, int(total))
+            cap = quantize_capacity(max(cap * 2, int(total)))
             stats.n_retries += 1
         raise ExecutorError("parallel local join exceeded retries")
 

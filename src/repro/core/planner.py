@@ -20,6 +20,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Callable
 
+from .backend import quantize_capacity
 from .query import O, P, S, Query, TriplePattern, Var
 from .stats import GlobalStats
 
@@ -37,8 +38,12 @@ class Plan:
     parallel: bool  # zero estimated communication (subject star etc.)
 
     def capacity_hint(self, floor: int = 64, ceil: int = 1 << 20) -> int:
+        """Power-of-two capacity class covering 2x the estimated cardinality.
+
+        Quantized so that queries with nearby estimates share jitted stages
+        instead of each baking a fresh static shape (recompilation storm)."""
         est = max([1.0] + [c for c in self.est_cards if math.isfinite(c)])
-        return int(min(max(floor, 2 * est), ceil))
+        return quantize_capacity(2 * est, floor=floor, ceil=ceil)
 
 
 @dataclass

@@ -75,7 +75,12 @@ class Query:
     capacity: int = 4096
 
     def __post_init__(self) -> None:
+        from .backend import quantize_capacity
+
         self._vars = sorted({v for q in self.patterns for v in q.vars})
+        # capacities are static jit shapes: snap user hints to the shared
+        # power-of-two classes so same-shape queries reuse compiled stages
+        self.capacity = quantize_capacity(self.capacity)
 
     # ------------------------------------------------------------------ props
     @property

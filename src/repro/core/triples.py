@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .backend import range_search, span_search
 from .query import O, P, S
 from .relalg import expand
 
@@ -169,22 +170,19 @@ class ShardedTripleStore:
 
 
 # =============================================================== probe kernels
-# All kernels below are per-worker and vmapped over the leading W axis.
+# All kernels below are per-worker and vmapped over the leading W axis.  The
+# sorted search itself is delegated to the probe backend (repro.core.backend):
+# plain searchsorted or the Pallas masked-compare kernel, chosen statically.
 
 
-def _range_1(keys: jax.Array, lo_key: jax.Array, hi_key: jax.Array):
-    lo = jnp.searchsorted(keys, lo_key, side="left")
-    hi = jnp.searchsorted(keys, hi_key, side="left")
-    return lo.astype(jnp.int32), hi.astype(jnp.int32)
-
-
-@partial(jax.jit, static_argnames=("use_po", "nid"))
+@partial(jax.jit, static_argnames=("use_po", "nid", "backend"))
 def match_ranges(
     store: ShardedTripleStore,
     p_const: jax.Array,  # scalar int32; -1 = variable predicate
     sk_const: jax.Array,  # scalar int32; -1 = no s/o constant bound
     use_po: bool,  # probe (p,o) on PO-index instead of (p,s) on PS-index
     nid: int,
+    backend: str = "searchsorted",
 ) -> tuple[jax.Array, jax.Array]:
     """Per-worker contiguous match range [lo, hi) for a triple pattern.
 
@@ -206,13 +204,14 @@ def match_ranges(
             jnp.int64(I64MAX - 1),
             jnp.where(sk_const < 0, (p64 + 1) * nid64, p64 * nid64 + k64 + 1),
         )
-        lo, hi = _range_1(keys_w, lo_key, hi_key)
-        return lo, jnp.minimum(hi, count_w)
+        lo, hi = span_search(keys_w, lo_key[None], hi_key[None],
+                             backend=backend)
+        return lo[0], jnp.minimum(hi[0], count_w)
 
     return jax.vmap(per_worker)(keys, store.counts)
 
 
-@partial(jax.jit, static_argnames=("col", "nid"))
+@partial(jax.jit, static_argnames=("col", "nid", "backend"))
 def probe_values(
     store: ShardedTripleStore,
     p_const: jax.Array,  # scalar int32 (>=0 when col is S or O)
@@ -220,6 +219,7 @@ def probe_values(
     valid: jax.Array,  # (W, n)
     col: int,  # which column the values bind: S(0), P(1) or O(2)
     nid: int,
+    backend: str = "searchsorted",
 ) -> tuple[jax.Array, jax.Array]:
     """Vectorized semi-join probe.
 
@@ -235,13 +235,12 @@ def probe_values(
     def per_worker(keys_w, count_w, vals_w, valid_w):
         v64 = jnp.maximum(vals_w.astype(jnp.int64), 0)
         if col == P:
-            klo = v64 * nid64
-            khi = (v64 + 1) * nid64
+            lo, hi = span_search(
+                keys_w, v64 * nid64, (v64 + 1) * nid64, backend=backend
+            )
         else:
-            klo = p64 * nid64 + v64
-            khi = klo + 1
-        lo = jnp.searchsorted(keys_w, klo, side="left").astype(jnp.int32)
-        hi = jnp.searchsorted(keys_w, khi, side="left").astype(jnp.int32)
+            # [k, k+1) span == (side-left, side-right) of the single key k
+            lo, hi = range_search(keys_w, p64 * nid64 + v64, backend=backend)
         hi = jnp.minimum(hi, count_w)
         lo = jnp.where(valid_w, lo, 0)
         hi = jnp.where(valid_w, hi, 0)

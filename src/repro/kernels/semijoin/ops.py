@@ -18,8 +18,11 @@ def batched_semijoin_probe(
     *,
     block_m: int = 256,
     block_n: int = 2048,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
+    """``interpret=None`` auto-detects the platform: compiled on TPU,
+    interpreter elsewhere (the previous hardcoded ``True`` silently ran the
+    interpreter even on TPU)."""
     fn = partial(
         semijoin_probe, block_m=block_m, block_n=block_n, interpret=interpret
     )

@@ -22,7 +22,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["semijoin_probe"]
+__all__ = ["semijoin_probe", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    """Interpret off-TPU (CPU/GPU tests, parity runs); compiled on TPU."""
+    return jax.default_backend() != "tpu"
 
 
 def _kernel(keys_ref, probes_ref, lo_ref, hi_ref, lo_scr, hi_scr, *,
@@ -48,21 +53,26 @@ def _kernel(keys_ref, probes_ref, lo_ref, hi_ref, lo_scr, hi_scr, *,
 
 
 def semijoin_probe(
-    keys: jax.Array,  # (N,) sorted int64 composite keys, INT64_MAX padded
-    probes: jax.Array,  # (M,) int64 probe keys
+    keys: jax.Array,  # (N,) sorted integer composite keys, dtype-max padded
+    probes: jax.Array,  # (M,) probe keys (same dtype as keys)
     *,
     block_m: int = 256,
     block_n: int = 2048,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Returns (lo, hi): match range per probe, each (M,) int32."""
+    """Returns (lo, hi): match range per probe, each (M,) int32.
+
+    ``interpret=None`` auto-detects: compiled on TPU, interpreter elsewhere.
+    """
+    if interpret is None:
+        interpret = default_interpret()
     n = keys.shape[0]
     m = probes.shape[0]
     n_pad = -(-n // block_n) * block_n
     m_pad = -(-m // block_m) * block_m
     if n_pad != n:
         keys = jnp.pad(keys, (0, n_pad - n),
-                       constant_values=jnp.iinfo(jnp.int64).max)
+                       constant_values=jnp.iinfo(keys.dtype).max)
     if m_pad != m:
         probes = jnp.pad(probes, (0, m_pad - m))
     grid = (m_pad // block_m, n_pad // block_n)

@@ -26,7 +26,23 @@ __all__ = [
     "apply_rope",
     "dense_init",
     "shape_of",
+    "shard_map",
 ]
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` across JAX versions.
+
+    Newer releases expose it at the top level with a ``check_vma`` flag;
+    older ones only have ``jax.experimental.shard_map.shard_map`` with the
+    equivalent flag spelled ``check_rep``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
 
 
 @dataclass(frozen=True)

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .common import ModelConfig, dense_init
+from .common import ModelConfig, dense_init, shard_map
 
 __all__ = [
     "init_embedding",
@@ -131,7 +131,7 @@ def adaptive_embed(
 
     data_spec = (data_axes if len(data_axes) > 1 else
                  (data_axes[0] if data_axes else None))
-    out, overflow = jax.shard_map(
+    out, overflow = shard_map(
         inner,
         mesh=mesh,
         in_specs=(P(axis, None), P(data_spec, None), P(None, None)),

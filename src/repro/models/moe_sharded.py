@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from .common import ModelConfig
+from .common import ModelConfig, shard_map
 from .mlp import swiglu
 
 __all__ = ["moe_ffn_sharded"]
@@ -144,7 +144,7 @@ def moe_ffn_sharded(
         def fn(xl, router, w1l, w3l, w2l):
             return inner(xl, router, w1l, w3l, w2l, None)
 
-    return jax.shard_map(
+    return shard_map(
         fn,
         mesh=mesh,
         in_specs=tuple(in_specs),

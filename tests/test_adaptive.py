@@ -3,9 +3,11 @@ controller heat map / plan logic, adaptive embedding correctness (incl. a
 4-device subprocess check), hot-expert replication output-invariance."""
 from __future__ import annotations
 
+import os
 import subprocess
 import sys
 import textwrap
+from pathlib import Path
 
 import numpy as np
 import pytest
@@ -126,11 +128,15 @@ def test_adaptive_embed_multidevice_subprocess():
         print("OK")
         """
     )
+    # inherit the environment: scrubbing it drops platform pins such as
+    # JAX_PLATFORMS=cpu, and jax then probes TPU/GCP metadata with long
+    # retries — the subprocess burns its entire timeout before importing
     res = subprocess.run(
         [sys.executable, "-c", code],
         capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-        cwd="/root/repo",
+        env={**os.environ,
+             "PYTHONPATH": "src" + os.pathsep + os.environ.get("PYTHONPATH", "")},
+        cwd=str(Path(__file__).resolve().parent.parent),
     )
     assert "OK" in res.stdout, res.stderr[-2000:]
 

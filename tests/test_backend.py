@@ -1,0 +1,137 @@
+"""Probe-backend dispatch layer (ISSUE 1 tentpole).
+
+Covers:
+  * range/span search parity: Pallas masked-compare kernel vs searchsorted,
+  * power-of-two capacity quantization invariants,
+  * end-to-end engine parity: both backends produce bit-identical relations
+    and communication accounting over a synthetic adaptive workload,
+  * recompilation regression: repeated same-shape queries after warmup do
+    not grow the jit compile cache (the capacity classes do their job).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (x64 on, as in production)
+import jax.numpy as jnp
+
+from repro.core import backend as be
+from repro.core.engine import AdHashEngine
+from repro.data.synthetic_rdf import Workload, lubm_like
+
+from reference import match_query
+
+BACKENDS = ("searchsorted", "pallas")
+
+
+# ------------------------------------------------------------ search parity
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.int64])
+@pytest.mark.parametrize("n,m", [(57, 9), (600, 130)])
+def test_range_search_backends_agree(dtype, n, m):
+    rng = np.random.default_rng(0)
+    info = np.iinfo(np.int32 if dtype == jnp.int32 else np.int64)
+    keys = np.sort(rng.integers(0, 4 * n, n))
+    keys = np.concatenate([keys, [info.max] * 7])  # store-style max padding
+    probes = rng.integers(-3, 4 * n + 3, m)
+    keys_j = jnp.asarray(keys, dtype)
+    probes_j = jnp.asarray(probes, dtype)
+    lo_s, hi_s = be.range_search(keys_j, probes_j, backend="searchsorted")
+    lo_p, hi_p = be.range_search(keys_j, probes_j, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(lo_s), np.asarray(lo_p))
+    np.testing.assert_array_equal(np.asarray(hi_s), np.asarray(hi_p))
+
+
+def test_span_search_backends_agree():
+    rng = np.random.default_rng(1)
+    keys = jnp.asarray(np.sort(rng.integers(0, 1000, 300)), jnp.int64)
+    lo_keys = jnp.asarray(rng.integers(0, 1000, 40), jnp.int64)
+    hi_keys = lo_keys + jnp.asarray(rng.integers(0, 50, 40), jnp.int64)
+    out_s = be.span_search(keys, lo_keys, hi_keys, backend="searchsorted")
+    out_p = be.span_search(keys, lo_keys, hi_keys, backend="pallas")
+    for a, b in zip(out_s, out_p):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resolve_backend():
+    assert be.resolve_backend("auto") in be.PROBE_BACKENDS
+    assert be.resolve_backend(None) in be.PROBE_BACKENDS
+    assert be.resolve_backend("pallas") == "pallas"
+    with pytest.raises(ValueError):
+        be.resolve_backend("quantum")
+
+
+# ------------------------------------------------------------- quantization
+def test_quantize_capacity_classes():
+    for n in (0, 1, 63, 64, 65, 100, 4095, 4096, 4097):
+        q = be.quantize_capacity(n)
+        assert q >= max(n, 64)
+        assert q & (q - 1) == 0, q  # power of two
+    # monotone, and idempotent on its own output
+    qs = [be.quantize_capacity(n) for n in range(1, 3000, 17)]
+    assert qs == sorted(qs)
+    assert all(be.quantize_capacity(q) == q for q in qs)
+    # ceil caps hints
+    assert be.quantize_capacity(1 << 30, ceil=1 << 20) == 1 << 20
+
+
+# --------------------------------------------------------- end-to-end parity
+def _workload():
+    d, triples = lubm_like(n_universities=2, depts_per_univ=2,
+                           profs_per_dept=2, students_per_prof=2)
+    wl = Workload(d, seed=7)
+    qs = wl.sample(4)
+    return triples, qs + qs  # repeats drive the heat map over the threshold
+
+
+def test_engine_backend_parity():
+    """Both probe backends: bit-identical relations and comm accounting,
+    across distributed, parallel and (post-IRD) parallel-replica modes."""
+    triples, qs = _workload()
+    runs = {}
+    for backend in BACKENDS:
+        eng = AdHashEngine(triples, 3, adaptive=True, frequency_threshold=2,
+                           capacity=256, probe_backend=backend)
+        assert eng.probe_backend == backend
+        runs[backend] = [
+            (rel.to_set(), st.comm_cells, st.mode)
+            for rel, st in (eng.query(q) for q in qs)
+        ]
+    assert any(mode == "parallel-replica" for _, _, mode in
+               runs["searchsorted"]), "workload never adapted"
+    for (rel_a, comm_a, mode_a), (rel_b, comm_b, mode_b) in zip(
+        runs["searchsorted"], runs["pallas"]
+    ):
+        assert rel_a == rel_b
+        assert comm_a == comm_b
+        assert mode_a == mode_b
+
+
+def test_engine_backend_parity_vs_oracle():
+    """Each backend independently agrees with the brute-force oracle."""
+    triples, qs = _workload()
+    for backend in BACKENDS:
+        eng = AdHashEngine(triples, 2, adaptive=False, capacity=256,
+                           probe_backend=backend)
+        for q in qs[:4]:
+            rel, _ = eng.query(q)
+            got = set(map(tuple, rel.project_to(q.vars)))
+            assert got == match_query(triples, q), (backend, q.name)
+
+
+# --------------------------------------------------- recompilation regression
+def test_repeated_queries_do_not_recompile():
+    """After warmup, same-template queries (fresh constants) hit the jit
+    cache: zero new compilations (capacity quantization works)."""
+    d, triples = lubm_like()
+    wl = Workload(d, seed=11)
+    eng = AdHashEngine(triples, 4, adaptive=False)
+    # warm every template once (shapes are per-template, not per-constant)
+    warm = [t.instantiate(wl.rng) for t in wl.templates.values()]
+    for q in warm:
+        eng.query(q)
+    baseline = be.probe_compile_cache_size()
+    fresh = [t.instantiate(wl.rng) for t in wl.templates.values()]
+    for q in warm + fresh:  # exact repeats + fresh constants
+        eng.query(q)
+    assert be.probe_compile_cache_size() == baseline

@@ -9,6 +9,10 @@ Invariants checked against the brute-force oracle on random graphs/queries:
 from __future__ import annotations
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional test dependency "
+                    "(pip install hypothesis / the 'test' extra)")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

@@ -158,7 +158,9 @@ def test_compressed_allreduce_close_to_exact():
         out, new_state = pod_allreduce_compressed(grads, state, axis="pod")
         return out, new_state
 
-    out, state = jax.shard_map(
+    from repro.models.common import shard_map
+
+    out, state = shard_map(
         f, mesh=mesh,
         in_specs=(jax.sharding.PartitionSpec(),),
         out_specs=(jax.sharding.PartitionSpec(), jax.sharding.PartitionSpec()),
