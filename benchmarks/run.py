@@ -27,16 +27,17 @@ def main() -> None:
 
     t0 = time.perf_counter()
     rows: list[tuple[str, float, str]] = []
-    for mod in (
-        bench_partition,
-        bench_startup,
-        bench_probe,
-        bench_queries,
-        bench_adaptivity,
-        bench_heuristics,
-        bench_balance,
+    for bench in (
+        bench_partition.run,
+        bench_startup.run,
+        bench_probe.run,
+        bench_queries.run,
+        bench_queries.run_batched,  # batched vs sequential throughput
+        bench_adaptivity.run,
+        bench_heuristics.run,
+        bench_balance.run,
     ):
-        rows.extend(mod.run())
+        rows.extend(bench())
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

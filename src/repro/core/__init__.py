@@ -11,7 +11,9 @@ Modules:
   relalg         static-shape relational primitives (expand/compact/bucket)
   relation       fixed-capacity sharded intermediate results
   dsj            distributed semi-join stages (§4.1) — all_to_all vs all_gather
+                 + vmap-lifted batched variants (multi-query execution)
   executor       locality-aware distributed execution (Algorithm 1)
+  batcher        workload shape-bucketing for batched multi-query dispatch
   planner        DP cost-based optimizer (§4.2, §4.3)
   transform      core-vertex selection + redistribution tree (Alg. 2, §5.1-5.2)
   heatmap        hierarchical workload heat map (§5.4)

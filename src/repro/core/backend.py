@@ -143,6 +143,13 @@ def probe_compile_cache_size() -> int:
         dsj.probe_and_reply,
         dsj.finalize_join,
         dsj.local_probe_join,
+        dsj.match_first_batch,
+        dsj.project_unique_batch,
+        dsj.exchange_hash_batch,
+        dsj.exchange_broadcast_batch,
+        dsj.probe_and_reply_batch,
+        dsj.finalize_join_batch,
+        dsj.local_probe_join_batch,
     )
     # _cache_size is a private jit API with no stability guarantee; degrade
     # to 0 (metric unavailable) rather than crash on a jax version bump

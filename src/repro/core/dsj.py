@@ -39,6 +39,13 @@ __all__ = [
     "probe_and_reply",
     "finalize_join",
     "local_probe_join",
+    "match_first_batch",
+    "project_unique_batch",
+    "exchange_hash_batch",
+    "exchange_broadcast_batch",
+    "probe_and_reply_batch",
+    "finalize_join_batch",
+    "local_probe_join_batch",
 ]
 
 I32MAX = jnp.iinfo(jnp.int32).max
@@ -357,3 +364,126 @@ def local_probe_join(
 
     out_cols, out_valid = jax.vmap(per_worker)(rel_cols, rows, src, valid)
     return out_cols, out_valid, jnp.max(totals)
+
+
+# ===================================================== batched (multi-query)
+# vmap-lifted variants of the stages above: one dispatch evaluates a whole
+# shape bucket of queries stacked on a leading batch axis B.  All queries in
+# a bucket share the static arguments (PatternSpec, capacities, join
+# structure — that is what WorkloadBatcher buckets on); only the pattern
+# constants and the flowing arrays differ per query.  The store is broadcast
+# (in_axes=None): every query probes the same immutable shards.  Per-query
+# scalars (comm cells, overflow totals) come back as (B,) arrays so the
+# executor keeps the paper's per-query communication accounting exact.
+
+
+@partial(jax.jit, static_argnames=("spec", "cap_out", "backend"))
+def match_first_batch(
+    store: ShardedTripleStore,
+    consts: jax.Array,  # (B, 3) int32, -1 = variable
+    spec: PatternSpec,
+    cap_out: int,
+    backend: str = "searchsorted",
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched ``match_first``: (cols (B, W, cap_out, k), valid, total (B,))."""
+    fn = partial(match_first, spec=spec, cap_out=cap_out, backend=backend)
+    return jax.vmap(fn, in_axes=(None, 0))(store, consts)
+
+
+@partial(jax.jit, static_argnames=("col_idx", "cap_proj"))
+def project_unique_batch(
+    cols: jax.Array,  # (B, W, capR, k)
+    valid: jax.Array,
+    col_idx: int,
+    cap_proj: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched ``project_unique``: (proj (B, W, cap_proj), valid, max (B,))."""
+    fn = partial(project_unique, col_idx=col_idx, cap_proj=cap_proj)
+    return jax.vmap(fn)(cols, valid)
+
+
+@partial(jax.jit, static_argnames=("cap_peer",))
+def exchange_hash_batch(
+    proj: jax.Array,  # (B, W, cap_proj)
+    proj_valid: jax.Array,
+    cap_peer: int,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Batched ``exchange_hash``; cells (B,) is per-query wire accounting."""
+    fn = partial(exchange_hash, cap_peer=cap_peer)
+    return jax.vmap(fn)(proj, proj_valid)
+
+
+@jax.jit
+def exchange_broadcast_batch(
+    proj: jax.Array, proj_valid: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched ``exchange_broadcast``; cells (B,) per query."""
+    return jax.vmap(exchange_broadcast)(proj, proj_valid)
+
+
+@partial(jax.jit, static_argnames=("spec", "probe_col", "cap_flat", "cap_cand",
+                                   "backend"))
+def probe_and_reply_batch(
+    store: ShardedTripleStore,
+    recv: jax.Array,  # (B, W, W_send, cap_peer)
+    recv_valid: jax.Array,
+    consts: jax.Array,  # (B, 3)
+    spec: PatternSpec,
+    probe_col: int,
+    cap_flat: int,
+    cap_cand: int,
+    backend: str = "searchsorted",
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Batched ``probe_and_reply``; cells/max_flat/max_bucket are (B,)."""
+    fn = partial(probe_and_reply, spec=spec, probe_col=probe_col,
+                 cap_flat=cap_flat, cap_cand=cap_cand, backend=backend)
+    return jax.vmap(fn, in_axes=(None, 0, 0, 0))(
+        store, recv, recv_valid, consts
+    )
+
+
+@partial(jax.jit, static_argnames=("join_col_rel", "probe_col",
+                                   "shared_checks", "append_cols", "cap_out",
+                                   "backend"))
+def finalize_join_batch(
+    rel_cols: jax.Array,  # (B, W, capR, k)
+    rel_valid: jax.Array,
+    cand: jax.Array,  # (B, W, R, cap_cand, 3)
+    cand_valid: jax.Array,
+    join_col_rel: int,
+    probe_col: int,
+    shared_checks: tuple[tuple[int, int], ...],
+    append_cols: tuple[int, ...],
+    cap_out: int,
+    backend: str = "searchsorted",
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched ``finalize_join``: (out (B, W, cap_out, k+new), valid, (B,))."""
+    fn = partial(finalize_join, join_col_rel=join_col_rel,
+                 probe_col=probe_col, shared_checks=shared_checks,
+                 append_cols=append_cols, cap_out=cap_out, backend=backend)
+    return jax.vmap(fn)(rel_cols, rel_valid, cand, cand_valid)
+
+
+@partial(jax.jit, static_argnames=("spec", "join_col_rel", "probe_col",
+                                   "shared_checks", "append_cols", "cap_out",
+                                   "backend"))
+def local_probe_join_batch(
+    store: ShardedTripleStore,
+    rel_cols: jax.Array,  # (B, W, capR, k)
+    rel_valid: jax.Array,
+    consts: jax.Array,  # (B, 3)
+    spec: PatternSpec,
+    join_col_rel: int,
+    probe_col: int,
+    shared_checks: tuple[tuple[int, int], ...],
+    append_cols: tuple[int, ...],
+    cap_out: int,
+    backend: str = "searchsorted",
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched ``local_probe_join`` (store broadcast, queries batched)."""
+    fn = partial(local_probe_join, spec=spec, join_col_rel=join_col_rel,
+                 probe_col=probe_col, shared_checks=shared_checks,
+                 append_cols=append_cols, cap_out=cap_out, backend=backend)
+    return jax.vmap(fn, in_axes=(None, 0, 0, 0))(
+        store, rel_cols, rel_valid, consts
+    )

@@ -22,8 +22,9 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .backend import quantize_capacity, resolve_backend
+from .batcher import WorkloadBatcher
 from .dictionary import Dictionary
-from .executor import Executor, QueryStats
+from .executor import Executor, ExecutorError, QueryStats
 from .heatmap import HeatMap
 from .ird import IncrementalRedistributor, IRDStats
 from .partition import partition_by_subject
@@ -51,6 +52,7 @@ class EngineReport:
     ird_triples: int = 0
     n_redistributions: int = 0
     n_evictions: int = 0
+    n_batch_dispatches: int = 0  # batched-pipeline launches (query_batch)
     wall_time_s: float = 0.0
     history: list[tuple[str, int, float]] = field(default_factory=list)
 
@@ -145,7 +147,11 @@ class AdHashEngine:
     # ------------------------------------------------------------------ query
     def query(self, q: Query) -> tuple[Relation, QueryStats]:
         t0 = time.perf_counter()
-        tree = build_redistribution_tree(q, self.stats, self.heuristic)
+        # the redistribution tree only feeds the adaptivity machinery
+        tree = (
+            build_redistribution_tree(q, self.stats, self.heuristic)
+            if self.adaptive else None
+        )
 
         # (2) pattern-index hit -> parallel mode over replicas
         matches = self.pattern_index.match(tree) if self.adaptive else None
@@ -175,6 +181,117 @@ class AdHashEngine:
         self.report.comm_cells += qstats.comm_cells
         self.report.wall_time_s += dt
         self.report.history.append((qstats.mode, qstats.comm_cells, dt))
+        return rel, qstats
+
+    # ------------------------------------------------------------ batch query
+    def query_batch(
+        self, queries: list[Query]
+    ) -> list[tuple[Relation, QueryStats]]:
+        """Evaluate a workload with batched multi-query execution.
+
+        Semantically identical to ``[self.query(q) for q in queries]`` —
+        results, per-query communication accounting and the adaptivity loop
+        (heat-map inserts, IRD triggers, pattern-index state, evictions) all
+        behave as if the queries ran sequentially — but same-shape queries
+        are stacked on a leading batch axis and evaluated by one dispatch of
+        the vmap-lifted DSJ stages.
+
+        Two-pass structure, exact by construction:
+
+        1. *Control pass* (sequential, host-side): per query, in order —
+           transform, pattern-index match, plan, then heat-map insert + IRD.
+           This replays the adaptivity state machine exactly: the routing
+           decision for query i sees precisely the redistributions triggered
+           by queries 0..i-1.  Pattern-index hits execute immediately (the
+           sequential fallback — their replica modules could be evicted by a
+           later query's budget enforcement); distributed/parallel queries
+           are deferred into :class:`WorkloadBatcher` shape buckets, which is
+           safe because they only read the immutable main index.
+        2. *Execution pass*: one batched pipeline per bucket (singleton
+           buckets fall back to the sequential executor and its warm jit
+           cache), then the workload report is filled in query order.
+
+        Error semantics differ from the sequential loop: if a query is
+        genuinely unexecutable (retry budget exhausted even sequentially)
+        the same ``ExecutorError`` propagates, but the adaptivity control
+        pass has by then processed the *whole* workload — equivalent to the
+        failing query having been last — and no partial results or report
+        entries are recorded.
+        """
+        # per query: (Relation, QueryStats, wall seconds)
+        results: list[tuple | None] = [None] * len(queries)
+        batcher = WorkloadBatcher(
+            self.executor.locality_aware, self.executor.pinned_opt
+        )
+        t_all = time.perf_counter()
+
+        # ---- pass 1: adaptivity control, replica-mode execution, bucketing
+        for i, q in enumerate(queries):
+            tree = (
+                build_redistribution_tree(q, self.stats, self.heuristic)
+                if self.adaptive else None
+            )
+            matches = self.pattern_index.match(tree) if self.adaptive else None
+            if matches is not None:
+                t0 = time.perf_counter()
+                rel, qstats = self.parallel_exec.execute(
+                    tree, matches, self.capacity
+                )
+                results[i] = (rel, qstats, time.perf_counter() - t0)
+            else:
+                plan = self.planner.plan(q)
+                batcher.add(i, q, plan.ordering, plan.join_vars,
+                            max(self.capacity, plan.capacity_hint()))
+            if self.adaptive:
+                self.heatmap.insert(tree)
+                self._maybe_redistribute()
+
+        # ---- pass 2: one dispatch per shape bucket
+        for bucket in batcher.buckets():
+            t0 = time.perf_counter()
+            if len(bucket) == 1:
+                rels_stats = [self._run_sequential(bucket, 0)]
+            else:
+                try:
+                    rels, stats_l = self.executor.execute_batch(
+                        bucket.plan, bucket.stacked_consts()
+                    )
+                    self.report.n_batch_dispatches += 1
+                    rels_stats = list(zip(rels, stats_l))
+                except ExecutorError:
+                    # overflow pathologies etc.: per-query sequential fallback
+                    rels_stats = [
+                        self._run_sequential(bucket, j)
+                        for j in range(len(bucket))
+                    ]
+            dt = (time.perf_counter() - t0) / max(len(bucket), 1)
+            for tag, (rel, qstats) in zip(bucket.tags, rels_stats):
+                results[tag] = (rel, qstats, dt)
+
+        # ---- workload report, in original query order
+        out: list[tuple[Relation, QueryStats]] = []
+        for item in results:
+            assert item is not None
+            rel, qstats, dt = item
+            if qstats.mode == "parallel-replica":
+                self.report.n_parallel_replica += 1
+            elif qstats.mode == "parallel":
+                self.report.n_parallel += 1
+            else:
+                self.report.n_distributed += 1
+            self.report.n_queries += 1
+            self.report.comm_cells += qstats.comm_cells
+            self.report.history.append((qstats.mode, qstats.comm_cells, dt))
+            out.append((rel, qstats))
+        self.report.wall_time_s += time.perf_counter() - t_all
+        return out
+
+    def _run_sequential(self, bucket, j: int) -> tuple[Relation, QueryStats]:
+        """Sequential-executor fallback for one bucket member."""
+        rel, qstats = self.executor.execute(
+            bucket.queries[j], bucket.orderings[j], bucket.join_vars[j],
+            capacity=max(self.capacity, bucket.capacities[j]),
+        )
         return rel, qstats
 
     # ------------------------------------------------------------- adaptivity

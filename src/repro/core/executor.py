@@ -18,6 +18,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 import jax.numpy as jnp
+import numpy as np
 
 from . import dsj
 from .backend import quantize_capacity, resolve_backend
@@ -71,6 +72,40 @@ def _append_plan(rel_vars: tuple[Var, ...], q: TriplePattern
     return tuple(append), tuple(out)
 
 
+def step_descriptor(
+    rel_vars: tuple[Var, ...],
+    q: TriplePattern,
+    join_var: Var,
+    pinned: Var | None,
+    locality_aware: bool,
+    pinned_opt: bool,
+) -> tuple[str, int, int, tuple, tuple, tuple[Var, ...]]:
+    """Static description of one join step: the §4.1.3 case selection plus
+    the join-column/check/append layout.  Single source of truth — the
+    sequential executor runs it and WorkloadBatcher buckets on it, so the
+    two can never drift apart.
+
+    Returns (kind 'local'|'hash'|'bcast', c1, c2, checks, append_cols,
+    out_vars)."""
+    c1 = rel_vars.index(join_var)
+    c2 = q.col_of(join_var)  # subject preferred by col_of
+    checks = _shared_checks(rel_vars, q, join_var)
+    append_cols, out_vars = _append_plan(rel_vars, q)
+    if (
+        c2 == S
+        and pinned is not None
+        and join_var == pinned
+        and pinned_opt
+        and locality_aware
+    ):
+        kind = "local"  # case (i): zero communication
+    elif c2 == S and locality_aware:
+        kind = "hash"  # case (ii): Observation 1 fast path
+    else:
+        kind = "bcast"  # case (iii)
+    return kind, c1, c2, checks, append_cols, out_vars
+
+
 class Executor:
     """Evaluates one ordered query against a ShardedTripleStore.
 
@@ -109,16 +144,9 @@ class Executor:
                                                  backend=self.backend)
             if int(total) <= cap:
                 # keep one column per distinct variable (handles ?x p ?x)
-                vc = q.var_cols()
-                keep: list[int] = []
-                seen: set[Var] = set()
-                for i, (v, _) in enumerate(vc):
-                    if v not in seen:
-                        seen.add(v)
-                        keep.append(i)
-                vars_ = tuple(vc[i][0] for i in keep)
-                if len(keep) != len(vc):
-                    cols = cols[..., keep]
+                keep, vars_ = q.distinct_var_cols()
+                if len(keep) != len(q.var_cols()):
+                    cols = cols[..., list(keep)]
                 return Relation(cols, valid, vars_)
             cap = quantize_capacity(max(cap * 2, int(total)))
             stats.n_retries += 1
@@ -136,19 +164,13 @@ class Executor:
     ) -> Relation:
         spec = dsj.PatternSpec.of(q)
         consts = dsj.pattern_consts(q)
-        c1 = rel.col_of(join_var)
-        c2 = q.col_of(join_var)  # subject preferred by col_of
-        checks = _shared_checks(rel.vars, q, join_var)
-        append_cols, out_vars = _append_plan(rel.vars, q)
+        kind, c1, c2, checks, append_cols, out_vars = step_descriptor(
+            rel.vars, q, join_var, pinned, self.locality_aware,
+            self.pinned_opt,
+        )
 
         # ---------------------------------------------------------- case (i)
-        if (
-            c2 == S
-            and pinned is not None
-            and join_var == pinned
-            and self.pinned_opt
-            and self.locality_aware
-        ):
+        if kind == "local":
             stats.n_local_joins += 1
             stats.plan.append(f"local-join on {join_var}")
             for _ in range(_MAX_RETRIES):
@@ -164,7 +186,7 @@ class Executor:
 
         # --------------------------------------------------- cases (ii)/(iii)
         stats.n_dsj += 1
-        hash_mode = (c2 == S) and self.locality_aware
+        hash_mode = kind == "hash"
         stats.plan.append(
             f"dsj[{'hash' if hash_mode else 'bcast'}] on {join_var}"
         )
@@ -252,3 +274,168 @@ class Executor:
         if stats.n_dsj == 0:
             stats.mode = "parallel"
         return rel, stats
+
+    # ---------------------------------------------------- batched execution
+    def execute_batch(
+        self, bplan, consts: np.ndarray
+    ) -> tuple[list[Relation], list[QueryStats]]:
+        """Evaluate one shape bucket in a single batched pipeline.
+
+        ``bplan`` is a :class:`repro.core.batcher.BatchPlan`; ``consts`` is
+        (B, n_patterns, 3) pattern constants in plan order.  Same retry
+        discipline as ``execute`` — a stage retries with a doubled capacity
+        class when *any* bucket member overflows (results are unchanged: a
+        stage is only accepted once no query drops rows).  Communication is
+        accounted per query from the stages' (B,) cell counts.
+        """
+        from .batcher import quantize_batch
+
+        b = consts.shape[0]
+        b_pad = quantize_batch(b)
+        consts_j = jnp.asarray(consts, dtype=jnp.int32)
+        if b_pad != b:
+            # pad with copies of the last query: real data, discarded outputs
+            pad = jnp.broadcast_to(
+                consts_j[-1:], (b_pad - b, *consts_j.shape[1:])
+            )
+            consts_j = jnp.concatenate([consts_j, pad])
+        stats = [QueryStats() for _ in range(b)]
+
+        cap = bplan.capacity
+        for _ in range(_MAX_RETRIES):
+            cols, valid, totals = dsj.match_first_batch(
+                self.store, consts_j[:, 0], bplan.first_spec, cap,
+                backend=self.backend,
+            )
+            t = int(jnp.max(totals))
+            if t <= cap:
+                break
+            cap = quantize_capacity(max(cap * 2, t))
+            for st in stats:
+                st.n_retries += 1
+        else:
+            raise ExecutorError("batched match_first exceeded retry budget")
+        if len(bplan.first_keep) != cols.shape[-1]:
+            cols = cols[..., list(bplan.first_keep)]
+        for st in stats:
+            st.plan.append(f"match[batch={b}] {bplan.first_spec}")
+
+        rel_cols, rel_valid = cols, valid
+        n_dsj = 0
+        for step, sp in enumerate(bplan.steps):
+            qc = consts_j[:, 1 + step]
+            if sp.kind == "local":
+                rel_cols, rel_valid = self._batch_local_step(
+                    sp, rel_cols, rel_valid, qc, bplan.capacity, stats
+                )
+            else:
+                n_dsj += 1
+                rel_cols, rel_valid = self._batch_dsj_step(
+                    sp, rel_cols, rel_valid, qc, bplan.capacity, stats
+                )
+
+        mode = "parallel" if n_dsj == 0 else "distributed"
+        out_vars = bplan.steps[-1].out_vars if bplan.steps else bplan.first_vars
+        # one host transfer + B views beats 2*B device-slice dispatches by
+        # orders of magnitude; results are final, so numpy backing is fine
+        cols_np = np.asarray(rel_cols)
+        valid_np = np.asarray(rel_valid)
+        rels = []
+        for i in range(b):
+            stats[i].mode = mode
+            rels.append(Relation(cols_np[i], valid_np[i], out_vars))
+        return rels, stats
+
+    def _batch_local_step(self, sp, rel_cols, rel_valid, qc, cap, stats):
+        for st in stats:
+            st.n_local_joins += 1
+            st.plan.append(f"local-join on {sp.join_var}")
+        for _ in range(_MAX_RETRIES):
+            cols, valid, totals = dsj.local_probe_join_batch(
+                self.store, rel_cols, rel_valid, qc, sp.spec, sp.c1, sp.c2,
+                sp.checks, sp.append_cols, cap, backend=self.backend,
+            )
+            t = int(jnp.max(totals))
+            if t <= cap:
+                return cols, valid
+            cap = quantize_capacity(max(cap * 2, t))
+            for st in stats:
+                st.n_retries += 1
+        raise ExecutorError("batched local join exceeded retry budget")
+
+    def _batch_dsj_step(self, sp, rel_cols, rel_valid, qc, cap, stats):
+        b = len(stats)
+        hash_mode = sp.kind == "hash"
+        for st in stats:
+            st.n_dsj += 1
+            st.plan.append(
+                f"dsj[{'hash' if hash_mode else 'bcast'}] on {sp.join_var}"
+            )
+
+        cap_proj = quantize_capacity(cap)
+        for _ in range(_MAX_RETRIES):
+            proj, pvalid, nuniq = dsj.project_unique_batch(
+                rel_cols, rel_valid, sp.c1, cap_proj
+            )
+            nu = int(jnp.max(nuniq))
+            if nu <= cap_proj:
+                break
+            cap_proj = quantize_capacity(max(cap_proj * 2, nu))
+            for st in stats:
+                st.n_retries += 1
+        else:
+            raise ExecutorError("batched projection exceeded retry budget")
+
+        if hash_mode:
+            cap_peer = cap_proj
+            for _ in range(_MAX_RETRIES):
+                recv, rvalid, cells, maxb = dsj.exchange_hash_batch(
+                    proj, pvalid, cap_peer
+                )
+                mb = int(jnp.max(maxb))
+                if mb <= cap_peer:
+                    break
+                cap_peer = quantize_capacity(max(cap_peer * 2, mb))
+                for st in stats:
+                    st.n_retries += 1
+            else:
+                raise ExecutorError("batched hash exchange exceeded retries")
+        else:
+            recv, rvalid, cells = dsj.exchange_broadcast_batch(proj, pvalid)
+        cells_np = np.asarray(cells)
+        for i in range(b):
+            stats[i].comm_cells += int(cells_np[i])
+
+        cap_flat = cap_cand = quantize_capacity(cap)
+        for _ in range(_MAX_RETRIES):
+            cand, cvalid, cells, maxf, maxc = dsj.probe_and_reply_batch(
+                self.store, recv, rvalid, qc, sp.spec, sp.c2, cap_flat,
+                cap_cand, backend=self.backend,
+            )
+            mf, mc = int(jnp.max(maxf)), int(jnp.max(maxc))
+            if mf <= cap_flat and mc <= cap_cand:
+                break
+            if mf > cap_flat:
+                cap_flat = quantize_capacity(max(cap_flat * 2, mf))
+            if mc > cap_cand:
+                cap_cand = quantize_capacity(max(cap_cand * 2, mc))
+            for st in stats:
+                st.n_retries += 1
+        else:
+            raise ExecutorError("batched probe/reply exceeded retry budget")
+        cells_np = np.asarray(cells)
+        for i in range(b):
+            stats[i].comm_cells += int(cells_np[i])
+
+        for _ in range(_MAX_RETRIES):
+            cols, valid, totals = dsj.finalize_join_batch(
+                rel_cols, rel_valid, cand, cvalid, sp.c1, sp.c2, sp.checks,
+                sp.append_cols, cap, backend=self.backend,
+            )
+            t = int(jnp.max(totals))
+            if t <= cap:
+                return cols, valid
+            cap = quantize_capacity(max(cap * 2, t))
+            for st in stats:
+                st.n_retries += 1
+        raise ExecutorError("batched finalize exceeded retry budget")

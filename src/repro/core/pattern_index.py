@@ -161,6 +161,31 @@ class PatternIndex:
             for pie in tbl.values()
         )
 
+    # ---------------------------------------------------------- comparison
+    def fingerprint(self) -> tuple:
+        """Canonical snapshot of the PI: structure, specializations, replica
+        storage ids and LRU timestamps.  Two engines that processed the same
+        workload through different execution paths (sequential vs batched)
+        must produce equal fingerprints — the parity tests' definition of
+        "identical pattern-index state"."""
+
+        def rec(tbl: dict) -> tuple:
+            return tuple(sorted(
+                (
+                    (pie.key.pred, pie.key.parent_is_subject),
+                    -1 if ck is None else ck,
+                    pie.storage_id or "",
+                    pie.last_ts,
+                    rec(pie.children),
+                )
+                for (_k, ck), pie in tbl.items()
+            ))
+
+        return tuple(sorted(
+            (-1 if rspec is None else rspec, rec(tbl))
+            for rspec, tbl in self.roots.items()
+        ))
+
 
 class ReplicaIndex:
     """Worker-side replica storage: one ShardedTripleStore per PI edge."""
@@ -269,15 +294,10 @@ class ParallelExecutor:
             cols, valid, total = dsj.match_first(store, consts, spec, cap,
                                                  backend=self.backend)
             if int(total) <= cap:
-                vars_ = []
-                keep = []
-                for i, (v, _c) in enumerate(q.var_cols()):
-                    if v not in vars_:
-                        vars_.append(v)
-                        keep.append(i)
+                keep, vars_ = q.distinct_var_cols()
                 if len(keep) != len(q.var_cols()):
-                    cols = cols[..., keep]
-                return Relation(cols, valid, tuple(vars_))
+                    cols = cols[..., list(keep)]
+                return Relation(cols, valid, vars_)
             cap = quantize_capacity(max(cap * 2, int(total)))
             stats.n_retries += 1
         raise ExecutorError("parallel first match exceeded retries")

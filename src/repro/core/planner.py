@@ -70,6 +70,13 @@ class LocalityAwarePlanner:
         self.stats = stats
         self.n = n_workers
         self.oracle = count_oracle
+        # exact-query plan memo: stats and the main index are immutable, so
+        # a query's plan is deterministic — workload throughput (query_batch)
+        # would otherwise re-run the DP + oracle probes per repeat.  Keys
+        # include constants (oracle counts depend on them), so a stream of
+        # fresh constants would grow this forever: bounded, LRU-evicted.
+        self._memo: dict[tuple, Plan] = {}
+        self._memo_cap = 4096
         preds = stats.per_pred
         self._n_preds = max(len(preds), 1)
         if preds:
@@ -199,6 +206,19 @@ class LocalityAwarePlanner:
 
     # --------------------------------------------------------------- DP loop
     def plan(self, query: Query) -> Plan:
+        key = tuple((q.s, q.p, q.o) for q in query.patterns)
+        cached = self._memo.pop(key, None)
+        if cached is None:
+            cached = self._plan_uncached(query)
+        self._memo[key] = cached  # (re-)insert: dict order is the LRU order
+        while len(self._memo) > self._memo_cap:
+            del self._memo[next(iter(self._memo))]
+        # fresh lists per caller: a mutated return value must not poison
+        # the memo for every future identical query
+        return Plan(list(cached.ordering), list(cached.join_vars),
+                    cached.est_cost, list(cached.est_cards), cached.parallel)
+
+    def _plan_uncached(self, query: Query) -> Plan:
         n = len(query.patterns)
         if n == 0:
             raise ValueError("empty query")

@@ -63,6 +63,20 @@ class TriplePattern:
                 return c
         return None
 
+    def distinct_var_cols(self) -> tuple[tuple[int, ...], tuple["Var", ...]]:
+        """First-occurrence positions (into ``var_cols()``) per distinct
+        variable + the deduped variable tuple — the column-keep plan for
+        repeated-variable patterns like (?x p ?x).  Shared by the sequential
+        executors and the workload batcher so all paths agree on relation
+        layout (the batched bucket key depends on it)."""
+        keep: list[int] = []
+        vars_: list[Var] = []
+        for i, (v, _c) in enumerate(self.var_cols()):
+            if v not in vars_:
+                vars_.append(v)
+                keep.append(i)
+        return tuple(keep), tuple(vars_)
+
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return f"({self.s} {self.p} {self.o})"
 

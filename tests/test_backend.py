@@ -135,3 +135,57 @@ def test_repeated_queries_do_not_recompile():
     for q in warm + fresh:  # exact repeats + fresh constants
         eng.query(q)
     assert be.probe_compile_cache_size() == baseline
+
+
+def _mixed_batch_workload(wl, n_per_template=3):
+    """Mixed workload with >=2 instances per template (real batch buckets)."""
+    return [
+        t.instantiate(wl.rng)
+        for t in wl.templates.values()
+        for _ in range(n_per_template)
+    ]
+
+
+def test_batched_queries_do_not_recompile():
+    """ISSUE 2: a warmed mixed workload executed via ``query_batch`` triggers
+    zero new jit compilations — batch-size quantization keeps the leading
+    batch axis, and capacity classes keep the stage shapes, cache-stable."""
+    d, triples = lubm_like()
+    wl = Workload(d, seed=13)
+    eng = AdHashEngine(triples, 4, adaptive=False)
+    eng.query_batch(_mixed_batch_workload(wl))  # warm the batched pipelines
+    baseline = be.probe_compile_cache_size()
+    # fresh constants, same templates; also a different (but same-class
+    # after power-of-two padding) number of instances per template
+    eng.query_batch(_mixed_batch_workload(wl))
+    eng.query_batch(_mixed_batch_workload(wl, n_per_template=4))
+    assert be.probe_compile_cache_size() == baseline
+
+
+def test_batched_capacity_classes_compile_once_each():
+    """Buckets with distinct capacity classes compile at most once each:
+    the classes split into distinct buckets, and re-running the same
+    two-class workload adds nothing to the jit cache."""
+    from repro.core.batcher import WorkloadBatcher
+
+    d, triples = lubm_like()
+    wl = Workload(d, seed=17)
+    eng = AdHashEngine(triples, 4, adaptive=False)
+    t_q1 = wl.templates["q1"]
+
+    def run_two_classes():
+        batcher = WorkloadBatcher()
+        for i in range(4):
+            q = t_q1.instantiate(wl.rng)
+            plan = eng.planner.plan(q)
+            batcher.add(i, q, plan.ordering, plan.join_vars,
+                        4096 if i % 2 == 0 else 1 << 14)
+        buckets = batcher.buckets()
+        assert len(buckets) == 2  # same structure, two capacity classes
+        for b in buckets:
+            eng.executor.execute_batch(b.plan, b.stacked_consts())
+
+    run_two_classes()
+    baseline = be.probe_compile_cache_size()
+    run_two_classes()
+    assert be.probe_compile_cache_size() == baseline

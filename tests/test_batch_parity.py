@@ -1,0 +1,154 @@
+"""Deterministic parity tests: batched multi-query execution vs the
+sequential loop, plus WorkloadBatcher unit tests.
+
+``AdHashEngine.query_batch`` must be observationally identical to
+``[engine.query(q) for q in queries]``: bit-identical relation contents,
+identical per-query communication accounting and modes, identical
+EngineReport counters, and identical pattern-index state — for
+adaptive=True/False, both probe backends, and under budget-forced eviction.
+
+These tests run fixed seed matrices so they never skip;
+tests/test_batch_properties.py re-checks the same invariants under
+hypothesis-generated workloads when hypothesis is installed.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401
+
+from repro.core.batcher import WorkloadBatcher, quantize_batch
+from repro.core.engine import AdHashEngine
+from repro.core.query import Const, Query, TriplePattern, Var
+from repro.data.synthetic_rdf import Workload, lubm_like
+
+from reference import match_query
+
+# one small graph for all cases: workloads vary, the data does not
+_DICT, _TRIPLES = lubm_like(n_universities=2, depts_per_univ=2,
+                            profs_per_dept=2, students_per_prof=2)
+
+_REPORT_FIELDS = (
+    "n_queries", "n_parallel", "n_parallel_replica", "n_distributed",
+    "comm_cells", "ird_comm_cells", "ird_triples", "n_redistributions",
+    "n_evictions",
+)
+
+
+def run_pair(queries, *, adaptive, backend="searchsorted", budget=None,
+             threshold=2):
+    kw = dict(adaptive=adaptive, frequency_threshold=threshold, capacity=256,
+              probe_backend=backend, replication_budget=budget)
+    seq = AdHashEngine(_TRIPLES, 3, **kw)
+    bat = AdHashEngine(_TRIPLES, 3, **kw)
+    seq_res = [seq.query(q) for q in queries]
+    bat_res = bat.query_batch(queries)
+    return seq, bat, seq_res, bat_res
+
+
+def assert_parity(queries, seq, bat, seq_res, bat_res):
+    for i, ((r1, s1), (r2, s2)) in enumerate(zip(seq_res, bat_res)):
+        assert r1.to_set() == r2.to_set(), (i, queries[i].name)
+        assert s1.comm_cells == s2.comm_cells, (i, queries[i].name)
+        assert s1.mode == s2.mode, (i, queries[i].name)
+        assert r1.vars == r2.vars, (i, queries[i].name)
+    for f in _REPORT_FIELDS:
+        assert getattr(seq.report, f) == getattr(bat.report, f), f
+    assert [h[:2] for h in seq.report.history] == \
+        [h[:2] for h in bat.report.history]
+    assert seq.pattern_index.fingerprint() == bat.pattern_index.fingerprint()
+    assert seq.pattern_index.n_edges() == bat.pattern_index.n_edges()
+    assert sorted(seq.replicas.modules) == sorted(bat.replicas.modules)
+    np.testing.assert_array_equal(
+        seq.replicas.per_worker_triples(), bat.replicas.per_worker_triples()
+    )
+
+
+# --------------------------------------------------------- parity matrices
+@pytest.mark.parametrize("seed", [0, 7, 1234])
+@pytest.mark.parametrize("adaptive", [True, False])
+def test_query_batch_matches_sequential(seed, adaptive):
+    wl = Workload(_DICT, seed=seed)
+    queries = wl.sample(6) * 2  # repeats drive the heat map over threshold
+    seq, bat, seq_res, bat_res = run_pair(queries, adaptive=adaptive)
+    assert_parity(queries, seq, bat, seq_res, bat_res)
+    # batched results are also independently correct vs the oracle
+    for q, (rel, _) in zip(queries, bat_res):
+        got = set(map(tuple, rel.project_to(q.vars)))
+        assert got == match_query(_TRIPLES, q), q.name
+
+
+@pytest.mark.parametrize("seed", [3, 21])
+def test_query_batch_matches_sequential_pallas(seed):
+    wl = Workload(_DICT, seed=seed)
+    queries = wl.sample(5) * 2
+    seq, bat, seq_res, bat_res = run_pair(
+        queries, adaptive=True, backend="pallas"
+    )
+    assert_parity(queries, seq, bat, seq_res, bat_res)
+
+
+@pytest.mark.parametrize("seed", [11, 99])
+def test_query_batch_parity_under_eviction(seed):
+    """A tiny replication budget forces evictions mid-workload; the batched
+    path must trigger the identical eviction sequence."""
+    wl = Workload(_DICT, seed=seed)
+    queries = wl.sample(8) * 2
+    seq, bat, seq_res, bat_res = run_pair(queries, adaptive=True, budget=8)
+    assert_parity(queries, seq, bat, seq_res, bat_res)
+    assert bat.report.n_evictions > 0  # the budget actually bit
+
+
+def test_query_batch_adaptivity_kicks_in_mid_batch():
+    """IRD triggered by early batch members must route later members
+    through the pattern index — exactly as the sequential loop would."""
+    adv = _DICT.lookup("ub:advisor")
+    q = Query([TriplePattern(Var("x"), Const(adv), Var("y"))], name="hotq")
+    eng = AdHashEngine(_TRIPLES, 3, adaptive=True, frequency_threshold=2,
+                       capacity=256)
+    results = eng.query_batch([q, q, q, q])
+    modes = [st.mode for _, st in results]
+    assert modes[0] != "parallel-replica"
+    assert modes[-1] == "parallel-replica"
+    ref = match_query(_TRIPLES, q)
+    for rel, _ in results:
+        assert set(map(tuple, rel.project_to(q.vars))) == ref
+
+
+def test_query_batch_empty_and_single():
+    eng = AdHashEngine(_TRIPLES, 2, adaptive=False, capacity=256)
+    assert eng.query_batch([]) == []
+    wl = Workload(_DICT, seed=3)
+    (q,) = wl.sample(1)
+    (rel, st_), = eng.query_batch([q])
+    assert set(map(tuple, rel.project_to(q.vars))) == match_query(_TRIPLES, q)
+    assert eng.report.n_queries == 1
+
+
+# ------------------------------------------------------- batcher internals
+def test_workload_batcher_buckets_same_template_together():
+    """Same-template queries (distinct constants) share one shape bucket;
+    distinct structures and distinct capacity classes split buckets."""
+    wl = Workload(_DICT, seed=5)
+    eng = AdHashEngine(_TRIPLES, 2, adaptive=False, capacity=256)
+    t_q1 = wl.templates["q1"]
+    t_q12 = wl.templates["q12"]
+    qa, qb = t_q1.instantiate(wl.rng), t_q1.instantiate(wl.rng)
+    qc = t_q12.instantiate(wl.rng)
+    batcher = WorkloadBatcher()
+    for i, q in enumerate((qa, qb, qc)):
+        plan = eng.planner.plan(q)
+        batcher.add(i, q, plan.ordering, plan.join_vars, 256)
+    buckets = batcher.buckets()
+    sizes = sorted(len(b) for b in buckets)
+    assert sizes == [1, 2]
+    # same structure at a different capacity class -> a different bucket
+    plan = eng.planner.plan(qa)
+    batcher.add(3, qa, plan.ordering, plan.join_vars, 4096)
+    assert len(batcher.buckets()) == 3
+
+
+def test_quantize_batch_classes():
+    assert [quantize_batch(b) for b in (1, 2, 3, 4, 5, 8, 9)] == \
+        [1, 2, 4, 4, 8, 8, 16]

@@ -1,0 +1,75 @@
+"""Property-based parity (hypothesis): batched execution vs sequential loop.
+
+Random template workloads over ``synthetic_rdf``: ``query_batch`` must
+return bit-identical relations, identical EngineReport counters
+(comm_cells, n_redistributions, n_evictions, ...), and identical
+pattern-index state as the sequential ``query`` loop, for both
+adaptive=True/False — the generative version of the fixed matrices in
+tests/test_batch_parity.py.
+
+Example counts are modest by default (tier-1 gate); the full CI job raises
+them via ``ADHASH_PROPERTY_EXAMPLES``.
+"""
+from __future__ import annotations
+
+import os
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional test dependency "
+                    "(pip install hypothesis / the 'test' extra)")
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+import repro.core  # noqa: F401
+
+from repro.data.synthetic_rdf import Workload
+
+from reference import match_query
+from test_batch_parity import _DICT, _TRIPLES, assert_parity, run_pair
+
+_SETTINGS = dict(
+    deadline=None,
+    max_examples=int(os.environ.get("ADHASH_PROPERTY_EXAMPLES", "6")),
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 10),
+       st.booleans(), st.booleans())
+@settings(**_SETTINGS)
+def test_query_batch_matches_sequential(seed, n, repeat, adaptive):
+    """Random template workloads: batched == sequential, both engine modes."""
+    wl = Workload(_DICT, seed=seed)
+    queries = wl.sample(n)
+    if repeat:  # repeats drive the heat map over the threshold (IRD fires)
+        queries = queries + queries
+    seq, bat, seq_res, bat_res = run_pair(queries, adaptive=adaptive)
+    assert_parity(queries, seq, bat, seq_res, bat_res)
+    # batched results are also independently correct vs the oracle
+    for q, (rel, _) in zip(queries, bat_res):
+        got = set(map(tuple, rel.project_to(q.vars)))
+        assert got == match_query(_TRIPLES, q), q.name
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6))
+@settings(**_SETTINGS)
+def test_query_batch_matches_sequential_pallas(seed, n):
+    """Same parity property through the Pallas probe backend."""
+    wl = Workload(_DICT, seed=seed)
+    queries = wl.sample(n) * 2
+    seq, bat, seq_res, bat_res = run_pair(
+        queries, adaptive=True, backend="pallas"
+    )
+    assert_parity(queries, seq, bat, seq_res, bat_res)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(4, 10))
+@settings(**_SETTINGS)
+def test_query_batch_parity_under_eviction(seed, n):
+    """A tiny replication budget forces evictions mid-workload; the batched
+    path must trigger the identical eviction sequence."""
+    wl = Workload(_DICT, seed=seed)
+    queries = wl.sample(n) * 2
+    seq, bat, seq_res, bat_res = run_pair(queries, adaptive=True, budget=8)
+    assert_parity(queries, seq, bat, seq_res, bat_res)

@@ -1,0 +1,161 @@
+"""Direct unit tests for the replication-budget enforcement path.
+
+``AdHashEngine._enforce_budget`` (LRU eviction loop with its ``guard < 64``
+backstop) and the ``_no_redistribute`` anti-thrash set were previously only
+exercised end-to-end through test_engine_adaptive.py; these tests drive them
+in isolation with controlled pattern-index / replica-index state.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401
+import jax.numpy as jnp
+
+from repro.core.engine import AdHashEngine
+from repro.core.query import Const, Query, TriplePattern, Var
+from repro.core.transform import build_redistribution_tree
+from repro.core.triples import ShardedTripleStore
+
+from paper_example import c, expected_fig2, load_example, prof_query
+
+
+def _engine(budget=None, threshold=2, w=2):
+    d, triples = load_example()
+    eng = AdHashEngine(triples, w, adaptive=True,
+                       frequency_threshold=threshold,
+                       replication_budget=budget, capacity=256)
+    return d, eng
+
+
+def _fake_replica(eng, n_triples_per_worker):
+    """Install a replica module with a known per-worker triple count."""
+    w = eng.w
+    cap = max(n_triples_per_worker, 1)
+    rows = jnp.zeros((w, cap, 3), jnp.int32)
+    rows = rows.at[:, :, 0].set(
+        jnp.broadcast_to(jnp.arange(cap, dtype=jnp.int32), (w, cap))
+    )
+    valid = jnp.broadcast_to(
+        jnp.arange(cap) < n_triples_per_worker, (w, cap)
+    )
+    st = ShardedTripleStore.from_device_rows(rows, valid, eng.n_ids)
+    sid = eng.replicas.new_id()
+    eng.replicas.put(sid, st)
+    return sid
+
+
+def _insert_pattern(eng, d, sid):
+    """Register a single-edge pattern in the PI backed by replica ``sid``."""
+    q = Query([TriplePattern(Var("x"), c(d, "advisor"), Var("y"))])
+    tree = build_redistribution_tree(q, eng.stats, eng.heuristic)
+    idx = tree.iter_edges()[0][1].pattern_idx
+    eng.pattern_index.insert(tree, {idx: sid})
+    return tree
+
+
+# -------------------------------------------------------- _enforce_budget
+def test_enforce_budget_noop_without_budget():
+    d, eng = _engine(budget=None)
+    sid = _fake_replica(eng, 100)
+    _insert_pattern(eng, d, sid)
+    eng._enforce_budget()
+    assert eng.report.n_evictions == 0
+    assert sid in eng.replicas.modules
+
+
+def test_enforce_budget_noop_under_budget():
+    d, eng = _engine(budget=100)
+    sid = _fake_replica(eng, 10)
+    _insert_pattern(eng, d, sid)
+    eng._enforce_budget()
+    assert eng.report.n_evictions == 0
+    assert sid in eng.replicas.modules
+
+
+def test_enforce_budget_evicts_lru_first():
+    """Oldest root subtree is evicted first; eviction stops at the budget."""
+    d, eng = _engine(budget=12)
+    sid_old = _fake_replica(eng, 10)
+    q_old = Query([TriplePattern(Var("x"), c(d, "advisor"), Var("y"))])
+    tree_old = build_redistribution_tree(q_old, eng.stats, eng.heuristic)
+    idx = tree_old.iter_edges()[0][1].pattern_idx
+    eng.pattern_index.insert(tree_old, {idx: sid_old})
+
+    sid_new = _fake_replica(eng, 10)
+    q_new = Query([TriplePattern(Var("x"), c(d, "worksFor"), Var("y"))])
+    tree_new = build_redistribution_tree(q_new, eng.stats, eng.heuristic)
+    idx = tree_new.iter_edges()[0][1].pattern_idx
+    eng.pattern_index.insert(tree_new, {idx: sid_new})
+
+    assert eng.replicas.max_per_worker() == 20
+    eng._enforce_budget()
+    # one eviction suffices (20 -> 10 <= 12) and it hits the LRU entry
+    assert eng.report.n_evictions == 1
+    assert sid_old not in eng.replicas.modules
+    assert sid_new in eng.replicas.modules
+    assert eng.pattern_index.match(tree_old) is None
+    assert eng.pattern_index.match(tree_new) is not None
+
+
+def test_enforce_budget_stops_when_nothing_evictable():
+    """Replica triples not referenced by any PI entry cannot be evicted:
+    the loop must terminate via the evict_lru_root() -> None break, not
+    spin to the guard."""
+    d, eng = _engine(budget=1)
+    _fake_replica(eng, 50)  # orphan module, no PI entry
+    eng._enforce_budget()
+    assert eng.report.n_evictions == 0
+    assert eng.replicas.max_per_worker() == 50  # over budget but stuck
+
+
+def test_enforce_budget_guard_bounds_iterations(monkeypatch):
+    """The ``guard < 64`` backstop bounds the loop even if eviction never
+    reduces the replica footprint (defensive: a stuck accounting bug must
+    not live-lock the engine)."""
+    d, eng = _engine(budget=1)
+    sid = _fake_replica(eng, 50)
+    _insert_pattern(eng, d, sid)
+    calls = []
+    # evictions that never drop anything: max_per_worker stays over budget
+    monkeypatch.setattr(
+        eng.pattern_index, "evict_lru_root",
+        lambda: calls.append(0) or [],
+    )
+    eng._enforce_budget()
+    assert len(calls) == 64
+    assert eng.report.n_evictions == 64
+
+
+# ------------------------------------------------------- _no_redistribute
+def test_no_redistribute_marks_oversized_patterns():
+    """A hot pattern too large for the budget even alone is redistributed
+    once, evicted, then blacklisted — no IRD thrash on later queries."""
+    d, eng = _engine(budget=0, threshold=2)
+    q = prof_query(d)
+    for _ in range(6):
+        rel, _ = eng.query(q)
+    # each replica-bearing hot subtree was redistributed exactly once,
+    # evicted (budget 0 fits nothing), then blacklisted; subtrees served by
+    # the main index alone hold no replicas and stay in the PI instead
+    first_round = eng.report.n_redistributions
+    assert first_round >= 1
+    assert 1 <= len(eng._no_redistribute) <= first_round
+    assert eng.report.n_evictions >= 1
+    for _ in range(4):  # anti-thrash: no further IRD attempts
+        rel, _ = eng.query(q)
+    assert eng.report.n_redistributions == first_round
+    # correctness unaffected: queries keep running distributed
+    got = set(map(tuple, rel.project_to([Var("prof"), Var("stud")])))
+    assert got == expected_fig2(d)
+
+
+def test_no_redistribute_not_marked_when_budget_fits():
+    d, eng = _engine(budget=10_000, threshold=2)
+    q = prof_query(d)
+    for _ in range(4):
+        eng.query(q)
+    assert eng.report.n_redistributions >= 1
+    assert eng._no_redistribute == set()
+    assert eng.report.n_evictions == 0
