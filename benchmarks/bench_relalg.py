@@ -1,0 +1,129 @@
+"""Fused relalg data-plane benchmark (ISSUE 3 acceptance numbers).
+
+Two measurements:
+  * primitive level: each relalg primitive under both backends at data-plane
+    sizes (n >= 64k rows).  The headline number is ``bucket_by_dest`` —
+    the fused count-then-place layout vs the argsort baseline (the derived
+    column reports the speedup; acceptance wants >= 1.3x).
+  * end-to-end: executor throughput over a warmed workload under each
+    backend, with the post-warmup jit-compile delta
+    (``backend.probe_compile_cache_size``) — must be zero for both.
+
+Rows are also dumped as JSON (``artifacts/bench_relalg.json``) for the
+bench trajectory.
+"""
+from __future__ import annotations
+
+import json
+import time
+from functools import partial
+from pathlib import Path
+
+import numpy as np
+
+import repro.core  # noqa: F401
+import jax
+import jax.numpy as jnp
+
+from repro.core import backend as be
+from repro.core import relalg as R
+from repro.core.engine import AdHashEngine
+from repro.data.synthetic_rdf import Workload, lubm_like
+
+
+def _time_us(fn, *args, iters: int = 20) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) * 1e6 / iters
+
+
+def _bench_primitives(n: int = 1 << 16, w: int = 8
+                      ) -> list[tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    rows: list[tuple[str, float, str]] = []
+    plat = jax.default_backend()
+
+    # ---- bucket_by_dest: the acceptance-criterion primitive
+    cap_peer = 1 << 13
+    vals = jnp.asarray(rng.integers(0, 1 << 30, (n, 1)).astype(np.int32))
+    dest = jnp.asarray(rng.integers(0, w, n).astype(np.int32))
+    valid = jnp.asarray(rng.random(n) > 0.1)
+    us = {}
+    for backend in be.DATA_PLANE_BACKENDS:
+        fn = jax.jit(partial(R.bucket_by_dest, n_dest=w, cap_peer=cap_peer,
+                             backend=backend))
+        us[backend] = _time_us(fn, vals, dest, valid)
+        rows.append((f"relalg/bucket_by_dest/{backend}/n{n}_w{w}",
+                     us[backend], f"platform={plat}"))
+    speedup = us["searchsorted"] / us["pallas"]
+    rows.append((
+        f"relalg/bucket_by_dest/speedup/n{n}_w{w}", us["pallas"],
+        f"fused_vs_argsort={speedup:.2f}x (accept >= 1.3x)",
+    ))
+
+    # ---- unique_compact (projection dedup)
+    pvals = jnp.asarray(rng.integers(0, n // 2, n).astype(np.int32))
+    pvalid = jnp.asarray(rng.random(n) > 0.1)
+    cap = n
+    for backend in be.DATA_PLANE_BACKENDS:
+        fn = jax.jit(partial(R.unique_compact, out_cap=cap, pad=2**31 - 1,
+                             backend=backend))
+        rows.append((f"relalg/unique_compact/{backend}/n{n}",
+                     _time_us(fn, pvals, pvalid), f"platform={plat}"))
+
+    # ---- expand (join expansion)
+    lo = jnp.asarray(rng.integers(0, 1000, n).astype(np.int32))
+    hi = lo + jnp.asarray(rng.integers(0, 3, n).astype(np.int32))
+    for backend in be.DATA_PLANE_BACKENDS:
+        fn = jax.jit(partial(R.expand, out_cap=2 * n, backend=backend))
+        rows.append((f"relalg/expand/{backend}/n{n}",
+                     _time_us(fn, lo, hi), f"platform={plat}"))
+    return rows
+
+
+def _bench_executor(n_queries: int = 60, warmup: int = 20
+                    ) -> list[tuple[str, float, str]]:
+    """Warmed end-to-end throughput + recompile regression per backend."""
+    rows: list[tuple[str, float, str]] = []
+    d, triples = lubm_like()
+    for backend in be.DATA_PLANE_BACKENDS:
+        wl = Workload(d, seed=9)
+        qs = wl.sample(n_queries)
+        eng = AdHashEngine(triples, 4, adaptive=False,
+                           data_plane_backend=backend)
+        for q in qs[:warmup]:
+            eng.query(q)
+        base = be.probe_compile_cache_size()
+        t0 = time.perf_counter()
+        for q in qs[warmup:]:
+            eng.query(q)
+        dt = time.perf_counter() - t0
+        recompiles = be.probe_compile_cache_size() - base
+        rows.append((
+            f"executor/{backend}/warm_us_per_query",
+            dt * 1e6 / (n_queries - warmup),
+            f"qps={(n_queries - warmup) / dt:.1f} "
+            f"post_warmup_recompiles={recompiles}",
+        ))
+    return rows
+
+
+def run(json_path: str | None = "artifacts/bench_relalg.json"
+        ) -> list[tuple[str, float, str]]:
+    rows = _bench_primitives() + _bench_executor()
+    if json_path:
+        path = Path(json_path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(
+            [{"name": n, "us_per_call": us, "derived": d}
+             for n, us, d in rows], indent=2) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -22,6 +22,7 @@ def main() -> None:
         bench_partition,
         bench_probe,
         bench_queries,
+        bench_relalg,
         bench_startup,
     )
 
@@ -31,6 +32,7 @@ def main() -> None:
         bench_partition.run,
         bench_startup.run,
         bench_probe.run,
+        bench_relalg.run,  # fused relalg primitives + recompile regression
         bench_queries.run,
         bench_queries.run_batched,  # batched vs sequential throughput
         bench_adaptivity.run,

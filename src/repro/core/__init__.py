@@ -5,7 +5,8 @@ Modules:
   partition      subject-hash initial partitioning + alternatives (§3.1, Tab. 2)
   stats          per-predicate global statistics + Chauvenet filter (§3.3, §5.1)
   query          SPARQL BGP model
-  backend        probe-backend dispatch (searchsorted | pallas) + capacity
+  backend        data-plane backend registry (searchsorted | pallas for
+                 probes *and* relalg primitives; DESIGN.md §4) + capacity
                  power-of-two quantization (jit-cache discipline)
   triples        worker storage module: sorted P/PS/PO indexes (§3.2)
   relalg         static-shape relational primitives (expand/compact/bucket)

@@ -1,45 +1,66 @@
-"""Probe-backend dispatch + static-capacity classes (DSJ hot-loop plumbing).
+"""Data-plane backend registry + static-capacity classes (DSJ hot-loop
+plumbing).
 
-Every index probe in the DSJ data plane is a vectorized sorted search: given
-a worker's sorted composite-key array, find the match range of a block of
-probe keys.  This module is the single place that decides *how* that search
-runs:
+Every hot operation in the DSJ data plane is one of four vectorized
+primitives: a sorted-search *probe* (match ranges for a block of keys), a
+join *expansion* (materialize variable-multiplicity ranges), a *projection
+compaction* (sort-dedupe-compact), and a per-destination *bucketing* (build
+all_to_all send buffers).  This module is the single place that decides
+*how* each of them runs:
 
-  ``searchsorted``  plain ``jnp.searchsorted`` binary search — the default on
-                    CPU/GPU, where data-dependent gathers are cheap.
-  ``pallas``        the masked-compare Pallas kernel (paper §4.1 hot loop,
-                    ``repro.kernels.semijoin``) — the default on TPU, where
-                    the VPU prefers O(N) compares over O(log N) gathers.
-                    Off-TPU the kernel runs in interpret mode (tests/parity).
+  ``searchsorted``  the plain-jnp path — binary searches and argsorts, the
+                    default on CPU/GPU where data-dependent gathers are
+                    cheap.
+  ``pallas``        the fused kernels (``repro.kernels.semijoin`` for
+                    probes, ``repro.kernels.relalg_ops`` for the relalg
+                    primitives) — the default on TPU, where the VPU prefers
+                    streaming compares over gathers and scatters.  Off-TPU
+                    the relalg impls run the kernels' fused jnp mirrors
+                    (set ``ADHASH_PALLAS_INTERPRET=1`` to force the real
+                    kernels through the interpreter, as CI does).
   ``auto``          resolved once per process to one of the two above.
+
+Implementations self-register via :func:`register_impl`; the providers are
+imported lazily on first dispatch so importing this module stays cheap.  One
+backend name selects the whole data plane — ``AdHashEngine(
+data_plane_backend=...)`` (alias ``probe_backend``) threads it into every
+jitted stage as a static argument.
 
 The second half of the module is the static-shape discipline that keeps the
 jit cache warm: every dynamic capacity (planner hints, retry doubling, user
 capacities) is quantized to a power-of-two class via ``quantize_capacity``,
 so repeated queries of the same shape reuse compiled stages instead of
-triggering a per-query recompilation storm.
+triggering a per-query recompilation storm.  See DESIGN.md §4.
 """
 from __future__ import annotations
+
+import importlib
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 __all__ = [
+    "DATA_PLANE_BACKENDS",
     "PROBE_BACKENDS",
     "default_backend",
     "resolve_backend",
+    "register_impl",
+    "get_impl",
     "range_search",
     "span_search",
     "quantize_capacity",
     "probe_compile_cache_size",
 ]
 
-PROBE_BACKENDS = ("searchsorted", "pallas")
+DATA_PLANE_BACKENDS = ("searchsorted", "pallas")
+# historical name from the probe-only dispatcher era; same tuple
+PROBE_BACKENDS = DATA_PLANE_BACKENDS
 
 
 # ---------------------------------------------------------------- resolution
 def default_backend() -> str:
-    """Platform-detected probe backend: Pallas on TPU, searchsorted elsewhere."""
+    """Platform-detected backend: Pallas on TPU, searchsorted elsewhere."""
     return "pallas" if jax.default_backend() == "tpu" else "searchsorted"
 
 
@@ -50,12 +71,55 @@ def resolve_backend(name: str | None) -> str:
     the jitted stages as a static argument (stable jit cache keys)."""
     if name is None or name == "auto":
         return default_backend()
-    if name not in PROBE_BACKENDS:
+    if name not in DATA_PLANE_BACKENDS:
         raise ValueError(
-            f"unknown probe backend {name!r}; expected one of "
-            f"{PROBE_BACKENDS + ('auto',)}"
+            f"unknown data-plane backend {name!r}; expected one of "
+            f"{DATA_PLANE_BACKENDS + ('auto',)}"
         )
     return name
+
+
+# ------------------------------------------------------------------ registry
+# (op, backend) -> implementation.  Providers self-register at import time;
+# the lazy import below pulls a provider in on the first dispatch so that
+# e.g. the kernels package is only loaded when a pallas impl is requested.
+_IMPLS: dict[tuple[str, str], Callable] = {}
+_PROVIDERS = {
+    "searchsorted": "repro.core.relalg",
+    "pallas": "repro.kernels.relalg_ops",
+}
+
+
+def register_impl(op: str, backend: str):
+    """Decorator: register ``fn`` as the ``backend`` impl of primitive
+    ``op`` (e.g. ``@register_impl("expand", "pallas")``)."""
+    if backend not in DATA_PLANE_BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    def deco(fn: Callable) -> Callable:
+        _IMPLS[(op, backend)] = fn
+        return fn
+
+    return deco
+
+
+def get_impl(op: str, backend: str) -> Callable:
+    """Look up the registered implementation, importing its provider module
+    on first use.  Called at trace time, so dispatch costs nothing at run
+    time and the choice is baked into the jit cache key via ``backend``."""
+    key = (op, backend)
+    if key not in _IMPLS:
+        provider = _PROVIDERS.get(backend)
+        if provider is None:
+            raise ValueError(f"unknown data-plane backend {backend!r}")
+        importlib.import_module(provider)
+    try:
+        return _IMPLS[key]
+    except KeyError:
+        raise KeyError(
+            f"no {backend!r} implementation registered for {op!r}; "
+            f"registered: {sorted(_IMPLS)}"
+        ) from None
 
 
 # ------------------------------------------------------------------- probes
@@ -125,13 +189,15 @@ def quantize_capacity(n: int | float, floor: int = 64,
 
 # ------------------------------------------------------------- observability
 def probe_compile_cache_size() -> int:
-    """Total jit-cache entries across the DSJ data-plane stages.
+    """Total jit-cache entries across the DSJ data-plane entry points —
+    probes *and* relalg kernels.
 
-    Used by the recompilation regression test and ``bench_probe``: after
-    warmup, repeated same-shape queries must not grow this number."""
+    Used by the recompilation regression tests and ``bench_probe`` /
+    ``bench_relalg``: after warmup, repeated same-shape queries must not
+    grow this number."""
     from . import dsj, triples
 
-    fns = (
+    fns = [
         triples.match_ranges,
         triples.probe_values,
         triples.gather_rows,
@@ -150,7 +216,17 @@ def probe_compile_cache_size() -> int:
         dsj.probe_and_reply_batch,
         dsj.finalize_join_batch,
         dsj.local_probe_join_batch,
-    )
+    ]
+    try:  # the relalg kernel wrappers are data-plane entry points too
+        from repro.kernels.relalg_ops import ops as relalg_ops_ops
+
+        fns += [
+            relalg_ops_ops.batched_expand,
+            relalg_ops_ops.batched_bucket_by_dest,
+            relalg_ops_ops.batched_unique_compact,
+        ]
+    except ImportError:  # pragma: no cover - kernels package unavailable
+        pass
     # _cache_size is a private jit API with no stability guarantee; degrade
     # to 0 (metric unavailable) rather than crash on a jax version bump
     return sum(getattr(f, "_cache_size", lambda: 0)() for f in fns)

@@ -132,7 +132,8 @@ def match_rows(
         lo, hi = match_ranges(store, jnp.int32(-1), jnp.int32(-1), use_po=False,
                               nid=store.n_ids, backend=backend)
     rows, _, valid, totals = gather_rows(
-        store, lo[:, None], hi[:, None], cap_out, use_po=use_po
+        store, lo[:, None], hi[:, None], cap_out, use_po=use_po,
+        backend=backend,
     )
     valid = _residual_mask(rows, valid, spec, consts, probed)
     return rows, valid, jnp.max(totals)
@@ -159,16 +160,18 @@ def match_first(
 
 
 # ----------------------------------------------------------------- projection
-@partial(jax.jit, static_argnames=("col_idx", "cap_proj"))
+@partial(jax.jit, static_argnames=("col_idx", "cap_proj", "backend"))
 def project_unique(
-    cols: jax.Array, valid: jax.Array, col_idx: int, cap_proj: int
+    cols: jax.Array, valid: jax.Array, col_idx: int, cap_proj: int,
+    backend: str = "searchsorted",
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """pi_c(RS) with per-worker dedup (the paper ships projected columns).
 
     Returns (proj (W, cap_proj), proj_valid, max_unique (overflow check))."""
 
     def per_worker(c_w, v_w):
-        u, uv, n = unique_compact(c_w[:, col_idx], v_w, cap_proj, I32MAX)
+        u, uv, n = unique_compact(c_w[:, col_idx], v_w, cap_proj, I32MAX,
+                                  backend=backend)
         return jnp.where(uv, u, -1), uv, n
 
     proj, pvalid, n = jax.vmap(per_worker)(cols, valid)
@@ -176,11 +179,12 @@ def project_unique(
 
 
 # ------------------------------------------------------------------ exchanges
-@partial(jax.jit, static_argnames=("cap_peer",))
+@partial(jax.jit, static_argnames=("cap_peer", "backend"))
 def exchange_hash(
     proj: jax.Array,  # (W, cap_proj)
     proj_valid: jax.Array,
     cap_peer: int,
+    backend: str = "searchsorted",
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Observation 1 fast path: hash-distribute the projected join column.
 
@@ -193,7 +197,7 @@ def exchange_hash(
     def per_worker(p_w, v_w):
         dest = (jnp_hash_ids(p_w) % w).astype(jnp.int32)
         send, svalid, max_wanted = bucket_by_dest(
-            p_w[:, None], dest, v_w, w, cap_peer
+            p_w[:, None], dest, v_w, w, cap_peer, backend=backend
         )
         return send[..., 0], svalid, max_wanted
 
@@ -249,13 +253,14 @@ def probe_and_reply(
         nid=store.n_ids, backend=backend,
     )
     rows, src, valid, totals = gather_rows(
-        store, lo, hi, cap_flat, use_po=(probe_col == O)
+        store, lo, hi, cap_flat, use_po=(probe_col == O), backend=backend
     )
     valid = _residual_mask(rows, valid, spec, consts, probed=(P, probe_col))
     sender = src // cap_peer  # which sender's value produced this row
 
     def per_worker(rows_w, sender_w, valid_w):
-        return bucket_by_dest(rows_w, sender_w, valid_w, n_send, cap_cand)
+        return bucket_by_dest(rows_w, sender_w, valid_w, n_send, cap_cand,
+                              backend=backend)
 
     send, svalid, maxb = jax.vmap(per_worker)(rows, sender, valid)
     # (W_replier, W_sender, cap, 3) -> (W_sender, W_replier, cap, 3)
@@ -299,7 +304,7 @@ def finalize_join(
         probe = jnp.where(rvalid, rcols[:, join_col_rel], I32MAX)
         lo, hi = range_search(skey, probe, backend=backend)
         hi = jnp.where(rvalid & (probe != I32MAX), hi, lo)
-        left, pos, valid, total = expand(lo, hi, cap_out)
+        left, pos, valid, total = expand(lo, hi, cap_out, backend=backend)
         ltuple = rcols[left]
         rtriple = scand[jnp.minimum(pos, scand.shape[0] - 1)]
         for rc, tc in shared_checks:
@@ -344,7 +349,7 @@ def local_probe_join(
         backend=backend,
     )
     rows, src, valid, totals = gather_rows(
-        store, lo, hi, cap_out, use_po=(probe_col == O)
+        store, lo, hi, cap_out, use_po=(probe_col == O), backend=backend
     )
     valid = _residual_mask(rows, valid, spec, consts, probed=(P, probe_col))
 
@@ -390,26 +395,29 @@ def match_first_batch(
     return jax.vmap(fn, in_axes=(None, 0))(store, consts)
 
 
-@partial(jax.jit, static_argnames=("col_idx", "cap_proj"))
+@partial(jax.jit, static_argnames=("col_idx", "cap_proj", "backend"))
 def project_unique_batch(
     cols: jax.Array,  # (B, W, capR, k)
     valid: jax.Array,
     col_idx: int,
     cap_proj: int,
+    backend: str = "searchsorted",
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Batched ``project_unique``: (proj (B, W, cap_proj), valid, max (B,))."""
-    fn = partial(project_unique, col_idx=col_idx, cap_proj=cap_proj)
+    fn = partial(project_unique, col_idx=col_idx, cap_proj=cap_proj,
+                 backend=backend)
     return jax.vmap(fn)(cols, valid)
 
 
-@partial(jax.jit, static_argnames=("cap_peer",))
+@partial(jax.jit, static_argnames=("cap_peer", "backend"))
 def exchange_hash_batch(
     proj: jax.Array,  # (B, W, cap_proj)
     proj_valid: jax.Array,
     cap_peer: int,
+    backend: str = "searchsorted",
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Batched ``exchange_hash``; cells (B,) is per-query wire accounting."""
-    fn = partial(exchange_hash, cap_peer=cap_peer)
+    fn = partial(exchange_hash, cap_peer=cap_peer, backend=backend)
     return jax.vmap(fn)(proj, proj_valid)
 
 

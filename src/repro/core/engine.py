@@ -77,6 +77,7 @@ class AdHashEngine:
         capacity: int = 1 << 12,
         use_count_oracle: bool = True,
         probe_backend: str = "auto",
+        data_plane_backend: str | None = None,
     ):
         t0 = time.perf_counter()
         triples = np.asarray(triples)
@@ -87,9 +88,20 @@ class AdHashEngine:
         self.budget = replication_budget
         self.heuristic = heuristic
         self.capacity = quantize_capacity(capacity)
-        # one concrete probe backend per engine: searchsorted binary search
-        # or the Pallas masked-compare kernel ('auto' = platform default)
-        self.probe_backend = resolve_backend(probe_backend)
+        # one concrete data-plane backend per engine: the plain-jnp path or
+        # the fused Pallas kernels ('auto' = platform default).  It covers
+        # index probes *and* the relalg primitives; ``data_plane_backend``
+        # is the canonical name, ``probe_backend`` the historical alias.
+        if data_plane_backend is not None and probe_backend not in (
+            "auto", data_plane_backend
+        ):
+            raise ValueError(
+                f"conflicting backends: probe_backend={probe_backend!r} "
+                f"vs data_plane_backend={data_plane_backend!r}"
+            )
+        self.probe_backend = resolve_backend(data_plane_backend or
+                                             probe_backend)
+        self.data_plane_backend = self.probe_backend
 
         # --- bootstrap (paper §3.4): partition, load, collect statistics
         self.n_ids = int(triples.max()) + 1 if triples.size else 1

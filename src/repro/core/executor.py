@@ -115,9 +115,11 @@ class Executor:
       pinned_opt=False      -> joins on the pinned subject still run as
                                synchronized DSJs (disables Observation 2)
 
-    ``probe_backend`` selects how index probes run ('searchsorted', 'pallas'
-    or 'auto' — see repro.core.backend); all capacities are quantized to
-    power-of-two classes so same-shape queries share compiled stages.
+    ``probe_backend`` selects the whole data-plane backend — index probes
+    *and* the relalg primitives (expand / unique_compact / bucket_by_dest)
+    run 'searchsorted' or 'pallas' per the registry in repro.core.backend;
+    all capacities are quantized to power-of-two classes so same-shape
+    queries share compiled stages.
     """
 
     def __init__(
@@ -193,7 +195,7 @@ class Executor:
         cap_proj = quantize_capacity(cap)
         for _ in range(_MAX_RETRIES):
             proj, pvalid, nuniq = dsj.project_unique(
-                rel.cols, rel.valid, c1, cap_proj
+                rel.cols, rel.valid, c1, cap_proj, backend=self.backend
             )
             if int(nuniq) <= cap_proj:
                 break
@@ -206,7 +208,7 @@ class Executor:
             cap_peer = cap_proj
             for _ in range(_MAX_RETRIES):
                 recv, rvalid, cells, maxb = dsj.exchange_hash(
-                    proj, pvalid, cap_peer
+                    proj, pvalid, cap_peer, backend=self.backend
                 )
                 if int(maxb) <= cap_peer:
                     break
@@ -375,7 +377,7 @@ class Executor:
         cap_proj = quantize_capacity(cap)
         for _ in range(_MAX_RETRIES):
             proj, pvalid, nuniq = dsj.project_unique_batch(
-                rel_cols, rel_valid, sp.c1, cap_proj
+                rel_cols, rel_valid, sp.c1, cap_proj, backend=self.backend
             )
             nu = int(jnp.max(nuniq))
             if nu <= cap_proj:
@@ -390,7 +392,7 @@ class Executor:
             cap_peer = cap_proj
             for _ in range(_MAX_RETRIES):
                 recv, rvalid, cells, maxb = dsj.exchange_hash_batch(
-                    proj, pvalid, cap_peer
+                    proj, pvalid, cap_peer, backend=self.backend
                 )
                 mb = int(jnp.max(maxb))
                 if mb <= cap_peer:

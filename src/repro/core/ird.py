@@ -145,7 +145,8 @@ class IncrementalRedistributor:
             dest = (dsj.jnp_hash_ids(rows_w[:, O]) % w).astype(jnp.int32)
             from .relalg import bucket_by_dest
 
-            return bucket_by_dest(rows_w, dest, valid_w, w, cap)
+            return bucket_by_dest(rows_w, dest, valid_w, w, cap,
+                                  backend=self.backend)
 
         cap_peer = cap
         for _ in range(_MAX_RETRIES):
@@ -192,7 +193,7 @@ class IncrementalRedistributor:
         cap_proj = cap
         for _ in range(_MAX_RETRIES):
             proj, projv, nuniq = dsj.project_unique(
-                prows, pvalid, prop_col, cap_proj
+                prows, pvalid, prop_col, cap_proj, backend=self.backend
             )
             if int(nuniq) <= cap_proj:
                 break
@@ -204,7 +205,7 @@ class IncrementalRedistributor:
             cap_peer = cap_proj
             for _ in range(_MAX_RETRIES):
                 recv, rvalid, cells, maxb = dsj.exchange_hash(
-                    proj, projv, cap_peer
+                    proj, projv, cap_peer, backend=self.backend
                 )
                 if int(maxb) <= cap_peer:
                     break

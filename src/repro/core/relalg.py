@@ -11,6 +11,16 @@ used by the distributed semi-join (dsj.py) and the parallel-mode executor:
   * ``dedupe_sorted`` — mask duplicates in a sorted array.
   * ``bucket_by_dest``— build fixed-capacity per-destination send buffers for
                         hash distribution (all_to_all exchange).
+  * ``unique_compact``— sort + dedupe + compact (projection dedup).
+
+``expand``, ``bucket_by_dest`` and ``unique_compact`` are *dispatchers*: the
+``backend`` argument routes them through the data-plane backend registry
+(``repro.core.backend``).  This module registers the plain-jnp
+argsort/searchsorted implementations (the ``searchsorted`` backend) and the
+fused jnp mirrors of the Pallas kernels (``*_fused`` / ``*_counting`` — the
+same gather-light algorithms the kernels in ``repro.kernels.relalg_ops`` run
+on TPU, expressed in jnp for CPU/GPU).  Both families are bit-identical on
+valid rows; the parity suites in tests/test_relalg_kernels.py enforce it.
 
 All functions are *per-worker* (1-D / 2-D) and are ``vmap``-ed over the
 leading worker axis by callers.  Everything is int32/int64-safe and mask
@@ -18,10 +28,10 @@ correct for padded rows.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
+
+from .backend import get_impl, register_impl
 
 __all__ = [
     "INVALID",
@@ -30,6 +40,9 @@ __all__ = [
     "dedupe_sorted",
     "bucket_by_dest",
     "unique_compact",
+    "expand_fused",
+    "bucket_by_dest_counting",
+    "unique_compact_fused",
 ]
 
 # Sentinel for padded/invalid id slots.  Ids are non-negative int32.
@@ -37,8 +50,9 @@ INVALID = jnp.int32(-1)
 I64MAX = jnp.iinfo(jnp.int64).max
 
 
+# ------------------------------------------------------------------ expand
 def expand(
-    lo: jax.Array, hi: jax.Array, out_cap: int
+    lo: jax.Array, hi: jax.Array, out_cap: int, backend: str = "searchsorted"
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Expand per-left-row ranges [lo_i, hi_i) into a flat row list.
 
@@ -48,9 +62,20 @@ def expand(
       valid[j]     output j is live
       total        true (unclamped) number of output rows -> overflow check
     """
+    return get_impl("expand", backend)(lo, hi, out_cap)
+
+
+@register_impl("expand", "searchsorted")
+def expand_fused(
+    lo: jax.Array, hi: jax.Array, out_cap: int
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """cumsum + searchsorted expansion.  The cumsum accumulates in int64:
+    virtual expansion totals routinely exceed int32 (e.g. an unselective
+    pattern against a large shard), and a wrapped ``total`` would defeat the
+    overflow-retry protocol.  Doubles as the kernels' off-TPU mirror."""
     counts = jnp.maximum(hi - lo, 0)
-    cum = jnp.cumsum(counts)
-    total = cum[-1] if counts.size else jnp.int32(0)
+    cum = jnp.cumsum(counts.astype(jnp.int64))
+    total = cum[-1] if counts.size else jnp.int64(0)
     j = jnp.arange(out_cap, dtype=cum.dtype)
     left_idx = jnp.searchsorted(cum, j, side="right")
     left_idx = jnp.minimum(left_idx, counts.shape[0] - 1).astype(jnp.int32)
@@ -58,9 +83,10 @@ def expand(
     within = j - start
     right_pos = (lo[left_idx] + within).astype(jnp.int32)
     valid = j < total
-    return left_idx, right_pos, valid, total.astype(jnp.int64)
+    return left_idx, right_pos, valid, total
 
 
+# ----------------------------------------------------------------- compact
 def compact(values: jax.Array, valid: jax.Array, out_cap: int) -> tuple[jax.Array, jax.Array]:
     """Stable-compact masked rows of ``values`` (n, ...) into (out_cap, ...).
 
@@ -91,10 +117,22 @@ def dedupe_sorted(values: jax.Array, valid: jax.Array) -> jax.Array:
     return first & valid
 
 
+# ---------------------------------------------------------- unique_compact
 def unique_compact(
+    values: jax.Array, valid: jax.Array, out_cap: int, pad: jax.Array | int,
+    backend: str = "searchsorted",
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Sort + dedupe + compact.  Returns (uniq (out_cap,), mask, n_unique).
+
+    ``pad`` must be strictly greater than every valid value (the engine uses
+    I32MAX against non-negative int32 ids)."""
+    return get_impl("unique_compact", backend)(values, valid, out_cap, pad)
+
+
+@register_impl("unique_compact", "searchsorted")
+def _unique_compact_argsort(
     values: jax.Array, valid: jax.Array, out_cap: int, pad: jax.Array | int
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Sort + dedupe + compact.  Returns (uniq (out_cap,), mask, n_unique)."""
     big = jnp.asarray(pad, values.dtype)
     keyed = jnp.where(valid, values, big)
     order = jnp.argsort(keyed)
@@ -106,6 +144,20 @@ def unique_compact(
     return uniq, uvalid, jnp.sum(mask.astype(jnp.int64))
 
 
+def unique_compact_fused(
+    values: jax.Array, valid: jax.Array, out_cap: int, pad: jax.Array | int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused jnp mirror of the bitonic kernel: one value sort (no argsort +
+    permutation gathers), dedupe against the shifted self, compact."""
+    big = jnp.asarray(pad, values.dtype)
+    sv = jnp.sort(jnp.where(valid, values, big))
+    mask = dedupe_sorted(sv, sv != big)
+    uniq, uvalid = compact(sv, mask, out_cap)
+    uniq = jnp.where(uvalid, uniq, big)
+    return uniq, uvalid, jnp.sum(mask.astype(jnp.int64))
+
+
+# ----------------------------------------------------------- bucket_by_dest
 def bucket_by_dest(
     values: jax.Array,  # (n, k) payload rows
     dest: jax.Array,  # (n,) destination worker per row
@@ -113,16 +165,31 @@ def bucket_by_dest(
     n_dest: int,
     cap_peer: int,
     pad: int = -1,
+    backend: str = "searchsorted",
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Build per-destination send buffers for an all_to_all exchange.
 
     Returns (send (n_dest, cap_peer, k), send_valid (n_dest, cap_peer),
-    overflow_total (max rows wanted by any destination, int64)).
-
-    Implementation: sort rows by destination, then each destination d reads
-    the contiguous slice [start_d, start_{d+1}) — O(n log n + n_dest*cap_peer)
-    with only gathers (TPU-friendly; no serial scatters).
+    overflow_total (max rows wanted by any destination, int64)).  Rows keep
+    their original relative order within each destination on every backend.
     """
+    return get_impl("bucket_by_dest", backend)(
+        values, dest, valid, n_dest, cap_peer, pad
+    )
+
+
+@register_impl("bucket_by_dest", "searchsorted")
+def _bucket_by_dest_argsort(
+    values: jax.Array,
+    dest: jax.Array,
+    valid: jax.Array,
+    n_dest: int,
+    cap_peer: int,
+    pad: int = -1,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Sort rows by destination, then each destination d reads the
+    contiguous slice [start_d, start_{d+1}) — O(n log n + n_dest*cap_peer)
+    with only gathers (no serial scatters)."""
     n = values.shape[0]
     d = jnp.where(valid, dest, n_dest).astype(jnp.int32)  # invalid -> overflow bucket
     order = jnp.argsort(d, stable=True)
@@ -137,4 +204,36 @@ def bucket_by_dest(
     send = vs[idx_c]
     send = jnp.where(send_valid[..., None], send, jnp.asarray(pad, values.dtype))
     max_wanted = jnp.max(hi - lo) if n_dest else jnp.int32(0)
+    return send, send_valid, max_wanted.astype(jnp.int64)
+
+
+def bucket_by_dest_counting(
+    values: jax.Array,
+    dest: jax.Array,
+    valid: jax.Array,
+    n_dest: int,
+    cap_peer: int,
+    pad: int = -1,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused jnp mirror of the count-then-place kernel: rank each row within
+    its destination via a one-hot running count — O(n * n_dest) streaming
+    compares and one scatter instead of the O(n log n) argsort.  n_dest (the
+    worker count) is small, so this wins from a few thousand rows up."""
+    n, k = values.shape
+    d = jnp.where(valid, dest, n_dest).astype(jnp.int32)
+    oh = d[:, None] == jnp.arange(n_dest, dtype=jnp.int32)[None, :]  # (n, w)
+    running = jnp.cumsum(oh.astype(jnp.int32), axis=0)
+    counts = running[-1] if n else jnp.zeros((n_dest,), jnp.int32)
+    rank = jnp.take_along_axis(
+        running, jnp.minimum(d, n_dest - 1)[:, None], axis=1
+    )[:, 0] - 1
+    placed = valid & (rank < cap_peer)  # overflow rows dropped, like argsort
+    flat = jnp.where(placed, d * cap_peer + rank, n_dest * cap_peer)
+    buf = jnp.full((n_dest * cap_peer + 1, k), pad, values.dtype)
+    send = buf.at[flat].set(values, mode="drop")[:-1].reshape(
+        n_dest, cap_peer, k
+    )
+    slot = jnp.arange(cap_peer, dtype=jnp.int32)
+    send_valid = slot[None, :] < counts[:, None]
+    max_wanted = jnp.max(counts) if n_dest else jnp.int32(0)
     return send, send_valid, max_wanted.astype(jnp.int64)

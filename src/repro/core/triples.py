@@ -250,13 +250,14 @@ def probe_values(
     return jax.vmap(per_worker)(keys, store.counts, values, valid)
 
 
-@partial(jax.jit, static_argnames=("cap_out", "use_po"))
+@partial(jax.jit, static_argnames=("cap_out", "use_po", "backend"))
 def gather_rows(
     store: ShardedTripleStore,
     lo: jax.Array,  # (W, n) range starts from probe_values/match_ranges
     hi: jax.Array,  # (W, n)
     cap_out: int,
     use_po: bool = False,
+    backend: str = "searchsorted",
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Expand per-value ranges into triple rows.
 
@@ -266,7 +267,7 @@ def gather_rows(
     spo = store.spo_po if use_po else store.spo_ps
 
     def per_worker(spo_w, lo_w, hi_w):
-        left, pos, valid, total = expand(lo_w, hi_w, cap_out)
+        left, pos, valid, total = expand(lo_w, hi_w, cap_out, backend=backend)
         rows = spo_w[jnp.minimum(pos, spo_w.shape[0] - 1)]
         rows = jnp.where(valid[:, None], rows, -1)
         return rows, left, valid, total

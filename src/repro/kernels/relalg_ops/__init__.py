@@ -1,0 +1,73 @@
+"""Fused data-plane kernels for the relalg primitives (ISSUE 3 tentpole).
+
+This package is the ``pallas`` provider of the data-plane backend registry
+(``repro.core.backend``) for the three remaining hot primitives:
+
+  expand          cumsum + range-materialize in one grid pass   (expand.py)
+  bucket_by_dest  count-then-place layout, no argsort           (bucket.py)
+  unique_compact  fused bitonic sort-dedupe-compact             (compact.py)
+
+Execution-mode policy (mirrors ``repro.kernels.semijoin``): on TPU the
+compiled Pallas kernels run.  Off-TPU the registered implementations fall
+back to the kernels' *fused jnp mirrors* in ``repro.core.relalg`` — the same
+count-then-place / sort-dedupe algorithms expressed in jnp — because Pallas
+interpret mode is a correctness tool, not a data plane.  The parity suites
+(tests/test_relalg_kernels.py) drive the actual kernels in interpret mode
+explicitly, and ``ADHASH_PALLAS_INTERPRET=1`` forces the kernels through the
+registry off-TPU so CI exercises the dispatch path end to end.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.core import backend as _backend
+from repro.core import relalg as _relalg
+
+from .bucket import bucket_by_dest_pallas
+from .compact import unique_compact_pallas
+from .expand import expand_pallas
+
+__all__ = [
+    "expand_pallas",
+    "bucket_by_dest_pallas",
+    "unique_compact_pallas",
+    "kernels_active",
+]
+
+
+# Read once at import: the choice is baked into jitted traces, so flipping
+# the env var mid-process could not retroactively change already-compiled
+# stages anyway — process-start-only semantics, made explicit here.
+_FORCE_INTERPRET_KERNELS = os.environ.get("ADHASH_PALLAS_INTERPRET") == "1"
+
+
+def kernels_active() -> bool:
+    """True when the registered 'pallas' impls run the actual Pallas kernels
+    (compiled on TPU; interpret mode when ADHASH_PALLAS_INTERPRET=1 was set
+    at process start)."""
+    return jax.default_backend() == "tpu" or _FORCE_INTERPRET_KERNELS
+
+
+@_backend.register_impl("expand", "pallas")
+def _expand(lo, hi, out_cap):
+    if kernels_active():
+        return expand_pallas(lo, hi, out_cap)
+    return _relalg.expand_fused(lo, hi, out_cap)
+
+
+@_backend.register_impl("bucket_by_dest", "pallas")
+def _bucket_by_dest(values, dest, valid, n_dest, cap_peer, pad=-1):
+    if kernels_active():
+        return bucket_by_dest_pallas(values, dest, valid, n_dest, cap_peer,
+                                     pad)
+    return _relalg.bucket_by_dest_counting(values, dest, valid, n_dest,
+                                           cap_peer, pad)
+
+
+@_backend.register_impl("unique_compact", "pallas")
+def _unique_compact(values, valid, out_cap, pad):
+    if kernels_active():
+        return unique_compact_pallas(values, valid, out_cap, pad)
+    return _relalg.unique_compact_fused(values, valid, out_cap, pad)

@@ -1,0 +1,20 @@
+"""Shared helpers for the relalg kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# one platform-detection rule for every data-plane kernel
+from repro.kernels.semijoin.semijoin import default_interpret  # noqa: F401
+
+__all__ = ["default_interpret", "cumsum_1d"]
+
+
+def cumsum_1d(x: jax.Array, n: int) -> jax.Array:
+    """Inclusive prefix sum via log-step shift-adds (no reduce_window)."""
+    idx = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+    d = 1
+    while d < n:
+        x = x + jnp.where(idx >= d, jnp.roll(x, d), 0)
+        d *= 2
+    return x

@@ -1,0 +1,133 @@
+"""Pallas kernel for ``relalg.bucket_by_dest`` — count-then-place layout.
+
+The reference builds per-destination send buffers with a stable argsort by
+destination plus ``searchsorted`` slicing: O(n log n) and gather-bound.  The
+kernel skips the sort entirely.  For every destination ``d`` (parallel grid
+axis) it streams the input blocks (sequential axis), keeps the running count
+of rows already placed for ``d`` in scratch, and computes each row's slot as
+
+  rank_i = carry_d + (#rows j <= i in this block with dest_j == d) - 1
+
+via an in-block prefix sum.  Placement is a masked-compare reduction instead
+of a scatter (TPU has no vector scatter): slot ``s`` of the output block
+accumulates ``sum_i values_i * [rank_i == s]`` — exactly one row matches per
+live slot, rows with rank >= cap_peer match nothing (dropped, like the
+reference's clamped slices).  Row order within a destination is original
+input order, bit-identical to the stable-argsort reference.
+
+VMEM budget: the (block_n, cap_peer) compare plane plus the (cap_peer, k)
+accumulator must fit; the autotuner sweeps ``block_n`` against it.  Like the
+sibling semijoin kernel, blocks are 1-D/2-D untiled — validated in interpret
+mode off-TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.relalg_ops._common import cumsum_1d, default_interpret
+from repro.kernels.tuning import block_config
+
+__all__ = ["bucket_by_dest_pallas"]
+
+
+def _kernel(vals_ref, dest_ref, valid_ref, send_ref, cnt_ref, acc_scr, c_scr,
+            *, n_in_blocks: int, block_n: int, cap_peer: int, k: int,
+            pad: int):
+    d = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        c_scr[...] = jnp.zeros_like(c_scr)
+
+    vals = vals_ref[...]  # (block_n, k)
+    m = (valid_ref[...] != 0) & (dest_ref[...] == d)
+    mi = m.astype(jnp.int32)
+    ranks = c_scr[0] + cumsum_1d(mi, block_n) - 1
+    slots = jax.lax.broadcasted_iota(jnp.int32, (block_n, cap_peer), 1)
+    eq = m[:, None] & (ranks[:, None] == slots)  # one-hot placement plane
+    for c in range(k):  # k is tiny and static (payload width)
+        acc_scr[:, c] += jnp.sum(
+            jnp.where(eq, vals[:, c][:, None], 0), axis=0,
+            dtype=acc_scr.dtype,
+        )
+    c_scr[0] += jnp.sum(mi, dtype=jnp.int32)
+
+    @pl.when(j == n_in_blocks - 1)
+    def _final():
+        cnt = c_scr[0]
+        live = jax.lax.broadcasted_iota(jnp.int32, (cap_peer,), 0) < cnt
+        send_ref[0] = jnp.where(
+            live[:, None], acc_scr[...], jnp.asarray(pad, acc_scr.dtype)
+        )
+        cnt_ref[0] = cnt
+
+
+def bucket_by_dest_pallas(
+    values: jax.Array,  # (n, k) payload rows
+    dest: jax.Array,  # (n,) destination per row
+    valid: jax.Array,  # (n,)
+    n_dest: int,
+    cap_peer: int,
+    pad: int = -1,
+    *,
+    block_n: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused bucket_by_dest: (send (n_dest, cap_peer, k), send_valid,
+    overflow_total int64) — same contract as the reference."""
+    if interpret is None:
+        interpret = default_interpret()
+    block_n = block_n or block_config("relalg_bucket")["block_n"]
+    n, k = values.shape
+    dest32 = dest.astype(jnp.int32)
+    valid32 = valid.astype(jnp.int32)
+
+    n_pad = -(-max(n, 1) // block_n) * block_n
+    if n_pad != n:
+        values = jnp.pad(values, ((0, n_pad - n), (0, 0)))
+        dest32 = jnp.pad(dest32, (0, n_pad - n), constant_values=-1)
+        valid32 = jnp.pad(valid32, (0, n_pad - n))
+    grid = (n_dest, n_pad // block_n)
+
+    kernel = functools.partial(
+        _kernel, n_in_blocks=grid[1], block_n=block_n, cap_peer=cap_peer,
+        k=k, pad=pad,
+    )
+    send, counts = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, k), lambda d, j: (j, 0)),
+            pl.BlockSpec((block_n,), lambda d, j: (j,)),
+            pl.BlockSpec((block_n,), lambda d, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cap_peer, k), lambda d, j: (d, 0, 0)),
+            pl.BlockSpec((1,), lambda d, j: (d,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_dest, cap_peer, k), values.dtype),
+            jax.ShapeDtypeStruct((n_dest,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((cap_peer, k), values.dtype),
+            pltpu.VMEM((1,), jnp.int32),
+        ],
+        compiler_params=dict(
+            dimension_semantics=("parallel", "arbitrary")
+        ) if not interpret else None,
+        interpret=interpret,
+    )(values, dest32, valid32)
+    slot = jnp.arange(cap_peer, dtype=jnp.int32)
+    send_valid = slot[None, :] < counts[:, None]
+    max_wanted = (
+        jnp.max(counts) if n_dest else jnp.int32(0)
+    ).astype(jnp.int64)
+    return send, send_valid, max_wanted

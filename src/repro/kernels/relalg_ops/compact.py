@@ -1,0 +1,107 @@
+"""Pallas kernel for ``relalg.unique_compact`` — fused sort-dedupe-compact.
+
+The reference does argsort + gather + adjacent-dedupe + cumsum-scatter (two
+data-dependent permutations).  The kernel keeps the whole array in VMEM and
+fuses the pipeline gather-free:
+
+  1. key invalid slots to the pad sentinel,
+  2. bitonic sort (statically unrolled compare-exchange network; each stage
+     is a reshape + min/max + select — no data-dependent indexing),
+  3. mask duplicates against the lane-rolled predecessor,
+  4. re-key masked slots to the sentinel and bitonic-sort again: because
+     survivors are already in order, the second sort is exactly the stable
+     compaction of the unique values to a prefix.
+
+Sentinel discipline (same contract as the reference): valid values must be
+strictly below ``pad`` — the engine's I32MAX pad guarantees it.  The array
+must fit in VMEM (it is a per-worker projection buffer, at most a few
+hundred KB).  Like the sibling semijoin kernel, blocks are 1-D — validated
+in interpret mode off-TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.relalg_ops._common import default_interpret
+
+__all__ = ["unique_compact_pallas"]
+
+
+def _compare_exchange(x: jax.Array, n: int, k: int, jj: int) -> jax.Array:
+    """One bitonic stage: partner i ^ jj, ascending iff (i & k) == 0."""
+    g = x.reshape(n // (2 * jj), 2, jj)
+    a, b = g[:, 0, :], g[:, 1, :]
+    mn = jnp.minimum(a, b)
+    mx = jnp.maximum(a, b)
+    base = jax.lax.broadcasted_iota(jnp.int32, (n // (2 * jj), 1), 0)
+    asc = ((base * 2 * jj) & k) == 0  # bit k is constant within a group
+    lo_ = jnp.where(asc, mn, mx)
+    hi_ = jnp.where(asc, mx, mn)
+    return jnp.concatenate([lo_[:, None, :], hi_[:, None, :]], axis=1
+                           ).reshape(n)
+
+
+def _bitonic_sort(x: jax.Array, n: int) -> jax.Array:
+    """Ascending bitonic sort of a power-of-two length-n array, unrolled."""
+    k = 2
+    while k <= n:
+        jj = k // 2
+        while jj >= 1:
+            x = _compare_exchange(x, n, k, jj)
+            jj //= 2
+        k *= 2
+    return x
+
+
+def _kernel(vals_ref, valid_ref, uniq_ref, n_ref, *, n_pad: int, pad: int):
+    big = jnp.asarray(pad, vals_ref.dtype)
+    x = jnp.where(valid_ref[...] != 0, vals_ref[...], big)
+    x = _bitonic_sort(x, n_pad)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (n_pad,), 0)
+    first = (x != jnp.roll(x, 1)) | (idx == 0)
+    mask = first & (x != big)
+    n_ref[0] = jnp.sum(mask, dtype=jnp.int32)
+    # second sort of the re-keyed array == stable compaction to a prefix
+    uniq_ref[...] = _bitonic_sort(jnp.where(mask, x, big), n_pad)
+
+
+def unique_compact_pallas(
+    values: jax.Array,  # (n,)
+    valid: jax.Array,  # (n,)
+    out_cap: int,
+    pad: jax.Array | int,
+    *,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused unique_compact: (uniq (out_cap,), mask, n_unique int64) — same
+    contract as the reference (pad must exceed every valid value)."""
+    if interpret is None:
+        interpret = default_interpret()
+    n = values.shape[0]
+    pad = int(pad)
+    n_pad = 1 << max(n - 1, 1).bit_length()  # power of two >= max(n, 2)
+    valid32 = valid.astype(jnp.int32)
+    if n_pad != n:
+        values = jnp.pad(values, (0, n_pad - n), constant_values=pad)
+        valid32 = jnp.pad(valid32, (0, n_pad - n))
+
+    kernel = functools.partial(_kernel, n_pad=n_pad, pad=pad)
+    uniq_full, n_unique = pl.pallas_call(
+        kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), values.dtype),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(values, valid32)
+    if out_cap <= n_pad:
+        uniq = uniq_full[:out_cap]
+    else:
+        uniq = jnp.pad(uniq_full, (0, out_cap - n_pad), constant_values=pad)
+    n64 = n_unique[0].astype(jnp.int64)
+    uvalid = jnp.arange(out_cap, dtype=jnp.int64) < n64
+    return uniq, uvalid, n64

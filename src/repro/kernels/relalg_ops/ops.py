@@ -1,0 +1,70 @@
+"""Jitted wrappers: per-worker batched relalg kernels (vmapped).
+
+Mirrors ``repro.kernels.semijoin.ops`` — these are the entry points the
+parity tests and benchmarks drive, and they are counted by
+``backend.probe_compile_cache_size`` so recompile regressions in the relalg
+data plane are visible to the same metric as the probe path.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .bucket import bucket_by_dest_pallas
+from .compact import unique_compact_pallas
+from .expand import expand_pallas
+
+__all__ = [
+    "batched_expand",
+    "batched_bucket_by_dest",
+    "batched_unique_compact",
+]
+
+
+@partial(jax.jit, static_argnames=("out_cap", "block_m", "block_n",
+                                   "interpret"))
+def batched_expand(
+    lo: jax.Array,  # (W, n)
+    hi: jax.Array,  # (W, n)
+    out_cap: int,
+    *,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    interpret: bool | None = None,
+):
+    fn = partial(expand_pallas, out_cap=out_cap, block_m=block_m,
+                 block_n=block_n, interpret=interpret)
+    return jax.vmap(fn)(lo, hi)
+
+
+@partial(jax.jit, static_argnames=("n_dest", "cap_peer", "pad", "block_n",
+                                   "interpret"))
+def batched_bucket_by_dest(
+    values: jax.Array,  # (W, n, k)
+    dest: jax.Array,  # (W, n)
+    valid: jax.Array,  # (W, n)
+    n_dest: int,
+    cap_peer: int,
+    pad: int = -1,
+    *,
+    block_n: int | None = None,
+    interpret: bool | None = None,
+):
+    fn = partial(bucket_by_dest_pallas, n_dest=n_dest, cap_peer=cap_peer,
+                 pad=pad, block_n=block_n, interpret=interpret)
+    return jax.vmap(fn)(values, dest, valid)
+
+
+@partial(jax.jit, static_argnames=("out_cap", "pad", "interpret"))
+def batched_unique_compact(
+    values: jax.Array,  # (W, n)
+    valid: jax.Array,  # (W, n)
+    out_cap: int,
+    pad: int,
+    *,
+    interpret: bool | None = None,
+):
+    fn = partial(unique_compact_pallas, out_cap=out_cap, pad=pad,
+                 interpret=interpret)
+    return jax.vmap(fn)(values, valid)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for the relalg kernels (the argsort/searchsorted path)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.relalg import bucket_by_dest, expand, unique_compact
+
+__all__ = ["expand_ref", "bucket_by_dest_ref", "unique_compact_ref"]
+
+
+def expand_ref(lo: jax.Array, hi: jax.Array, out_cap: int):
+    return expand(lo, hi, out_cap, backend="searchsorted")
+
+
+def bucket_by_dest_ref(values, dest, valid, n_dest: int, cap_peer: int,
+                       pad: int = -1):
+    return bucket_by_dest(values, dest, valid, n_dest, cap_peer, pad,
+                          backend="searchsorted")
+
+
+def unique_compact_ref(values, valid, out_cap: int, pad):
+    return unique_compact(values, valid, out_cap, pad, backend="searchsorted")

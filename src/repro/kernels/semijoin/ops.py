@@ -16,8 +16,8 @@ def batched_semijoin_probe(
     keys: jax.Array,  # (W, N) per-worker sorted keys
     probes: jax.Array,  # (W, M) per-worker probe keys
     *,
-    block_m: int = 256,
-    block_n: int = 2048,
+    block_m: int | None = None,
+    block_n: int | None = None,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """``interpret=None`` auto-detects the platform: compiled on TPU,

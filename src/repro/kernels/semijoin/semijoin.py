@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tuning import block_config
+
 __all__ = ["semijoin_probe", "default_interpret"]
 
 
@@ -56,16 +58,22 @@ def semijoin_probe(
     keys: jax.Array,  # (N,) sorted integer composite keys, dtype-max padded
     probes: jax.Array,  # (M,) probe keys (same dtype as keys)
     *,
-    block_m: int = 256,
-    block_n: int = 2048,
+    block_m: int | None = None,
+    block_n: int | None = None,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Returns (lo, hi): match range per probe, each (M,) int32.
 
     ``interpret=None`` auto-detects: compiled on TPU, interpreter elsewhere.
+    ``block_m``/``block_n`` default to the autotuned per-platform table
+    (``repro.kernels.tuning``; populated by ``benchmarks/autotune.py``).
     """
     if interpret is None:
         interpret = default_interpret()
+    if block_m is None or block_n is None:
+        cfg = block_config("semijoin_probe")
+        block_m = block_m or cfg["block_m"]
+        block_n = block_n or cfg["block_n"]
     n = keys.shape[0]
     m = probes.shape[0]
     n_pad = -(-n // block_n) * block_n

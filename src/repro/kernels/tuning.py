@@ -1,0 +1,98 @@
+"""Per-platform tuned block-size table for the Pallas data-plane kernels.
+
+The semijoin probe and the relalg kernels (expand / bucket_by_dest /
+unique_compact) all take grid block sizes that trade VMEM footprint against
+grid overhead.  Their in-code defaults are conservative; real numbers come
+from ``python -m benchmarks.autotune``, which sweeps the block space on the
+current platform and persists the winners here:
+
+    src/repro/kernels/tuned/<platform>.json      (checked in per platform)
+
+``block_config(kernel)`` is consulted at dispatch time whenever a caller does
+not pass explicit block sizes, so a tuned platform transparently runs the
+tuned configuration.  ``ADHASH_TUNED_DIR`` overrides the table directory
+(e.g. to test a fresh autotune run without overwriting the checked-in one).
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+from pathlib import Path
+
+import jax
+
+__all__ = [
+    "DEFAULTS",
+    "block_config",
+    "tuned_table",
+    "tuned_path",
+    "save_tuned",
+]
+
+# Conservative untuned defaults (the pre-autotuner hardcoded values).
+DEFAULTS: dict[str, dict[str, int]] = {
+    "semijoin_probe": {"block_m": 256, "block_n": 2048},
+    "relalg_expand": {"block_m": 256, "block_n": 1024},
+    "relalg_bucket": {"block_n": 256},
+}
+
+
+def tuned_path(platform: str | None = None) -> Path:
+    """Location of the per-platform tuned table (JSON)."""
+    platform = platform or jax.default_backend()
+    base = os.environ.get("ADHASH_TUNED_DIR")
+    root = Path(base) if base else Path(__file__).parent / "tuned"
+    return root / f"{platform}.json"
+
+
+def tuned_table(platform: str | None = None) -> dict[str, dict[str, int]]:
+    """DEFAULTS overlaid with the platform's persisted autotune results.
+
+    The env-dependent path is resolved on every call (so a late
+    ``ADHASH_TUNED_DIR`` override is honored); only the file load is
+    cached, keyed by the resolved path."""
+    return _load_table(str(tuned_path(platform)))
+
+
+@functools.lru_cache(maxsize=None)
+def _load_table(path_str: str) -> dict[str, dict[str, int]]:
+    cfg = {k: dict(v) for k, v in DEFAULTS.items()}
+    path = Path(path_str)
+    if path.exists():
+        try:
+            data = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError):
+            return cfg  # unreadable table -> untuned defaults, never crash
+        for kernel, blocks in data.get("kernels", {}).items():
+            cfg.setdefault(kernel, {}).update(
+                {k: int(v) for k, v in blocks.items()}
+            )
+    return cfg
+
+
+def block_config(kernel: str, platform: str | None = None) -> dict[str, int]:
+    """Tuned (or default) block sizes for one kernel on this platform."""
+    table = tuned_table(platform)
+    if kernel not in table:
+        raise KeyError(
+            f"unknown kernel {kernel!r}; known: {sorted(table)}"
+        )
+    return dict(table[kernel])
+
+
+def save_tuned(
+    kernels: dict[str, dict[str, int]],
+    platform: str | None = None,
+    meta: dict | None = None,
+) -> Path:
+    """Persist autotune winners for ``platform`` and drop the lookup cache."""
+    path = tuned_path(platform)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    payload = {"platform": platform or jax.default_backend(),
+               "kernels": kernels}
+    if meta:
+        payload["meta"] = meta
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    _load_table.cache_clear()
+    return path

@@ -1,0 +1,279 @@
+"""Parity suites for the fused relalg data plane (ISSUE 3 tentpole).
+
+Three implementations exist for each of expand / bucket_by_dest /
+unique_compact:
+
+  * the argsort/searchsorted jnp reference (``searchsorted`` backend),
+  * the fused jnp mirror (what the ``pallas`` backend runs off-TPU),
+  * the Pallas kernel (driven here in interpret mode).
+
+Deterministic matrices + hypothesis properties check all three bit-exact on
+valid (non-padded) rows, across the masked/padded edge cases: empty
+relations, all-invalid rows, exact-capacity overflow, duplicate-heavy
+inputs.  Also covers the int64 expansion-total regression and the batched
+jitted wrappers.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (x64 on, as in production)
+import jax.numpy as jnp
+
+from repro.core import relalg as R
+from repro.kernels.relalg_ops import (
+    bucket_by_dest_pallas,
+    expand_pallas,
+    unique_compact_pallas,
+)
+from repro.kernels.relalg_ops.ops import (
+    batched_bucket_by_dest,
+    batched_expand,
+    batched_unique_compact,
+)
+from repro.kernels.relalg_ops.ref import (
+    bucket_by_dest_ref,
+    expand_ref,
+    unique_compact_ref,
+)
+
+I32MAX = 2**31 - 1
+
+
+def _assert_expand_match(lo, hi, cap):
+    left_r, pos_r, valid_r, total_r = expand_ref(
+        jnp.asarray(lo), jnp.asarray(hi), cap
+    )
+    left_k, pos_k, valid_k, total_k = expand_pallas(
+        jnp.asarray(lo), jnp.asarray(hi), cap, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(valid_k), np.asarray(valid_r))
+    assert int(total_k) == int(total_r)
+    v = np.asarray(valid_r)
+    np.testing.assert_array_equal(np.asarray(left_k)[v], np.asarray(left_r)[v])
+    np.testing.assert_array_equal(np.asarray(pos_k)[v], np.asarray(pos_r)[v])
+
+
+def _assert_bucket_match(vals, dest, valid, w, cap_peer, pad=-1):
+    args = (jnp.asarray(vals), jnp.asarray(dest), jnp.asarray(valid))
+    ref = bucket_by_dest_ref(*args, w, cap_peer, pad)
+    for got in (
+        R.bucket_by_dest_counting(*args, w, cap_peer, pad),
+        bucket_by_dest_pallas(*args, w, cap_peer, pad, interpret=True),
+    ):
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _assert_unique_match(vals, valid, cap, pad=I32MAX):
+    args = (jnp.asarray(vals), jnp.asarray(valid))
+    ref = unique_compact_ref(*args, cap, pad)
+    for got in (
+        R.unique_compact_fused(*args, cap, pad),
+        unique_compact_pallas(*args, cap, pad, interpret=True),
+    ):
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------------- expand
+@pytest.mark.parametrize("n,cap", [(7, 16), (100, 64), (257, 300), (64, 64)])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_expand_parity_random(n, cap, seed):
+    rng = np.random.default_rng(seed)
+    lo = rng.integers(0, 60, n).astype(np.int32)
+    hi = lo + rng.integers(0, 6, n).astype(np.int32)
+    _assert_expand_match(lo, hi, cap)
+
+
+def test_expand_parity_edge_cases():
+    # empty relation: every range is empty
+    z = np.zeros(32, np.int32)
+    _assert_expand_match(z, z, 16)
+    # single massive range + exact-capacity boundary (total == cap)
+    lo = np.zeros(4, np.int32)
+    hi = np.array([5, 0, 11, 0], np.int32)
+    _assert_expand_match(lo, hi, 16)  # total = cap
+    _assert_expand_match(lo, hi, 15)  # total = cap + 1 -> overflow
+    _assert_expand_match(lo, hi, 300)  # cap >> total
+
+
+def test_expand_total_survives_int32_overflow():
+    """Virtual expansion counts > 2^31 must not wrap: the overflow-retry
+    protocol reads ``total`` to size the next capacity class."""
+    lo = jnp.zeros(8, jnp.int32)
+    hi = jnp.full(8, 1 << 30, jnp.int32)
+    for backend in ("searchsorted", "pallas"):
+        *_, total = R.expand(lo, hi, 32, backend=backend)
+        assert int(total) == 8 << 30  # 2^33, was wrapping in int32
+
+
+# ----------------------------------------------------------- bucket_by_dest
+@pytest.mark.parametrize("n,w,cap_peer", [(50, 4, 16), (200, 3, 64),
+                                          (65, 7, 8), (128, 1, 128)])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_bucket_parity_random(n, w, cap_peer, seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 1000, (n, 3)).astype(np.int32)
+    dest = rng.integers(0, w, n).astype(np.int32)
+    valid = rng.random(n) > 0.2
+    _assert_bucket_match(vals, dest, valid, w, cap_peer)
+
+
+def test_bucket_parity_edge_cases():
+    rng = np.random.default_rng(2)
+    vals = rng.integers(0, 9, (40, 2)).astype(np.int32)
+    dest = rng.integers(0, 3, 40).astype(np.int32)
+    # all-invalid rows (empty relation)
+    _assert_bucket_match(vals, dest, np.zeros(40, bool), 3, 8)
+    # exact-capacity overflow: one destination wants more than cap_peer
+    dest_hot = np.zeros(40, np.int32)
+    _assert_bucket_match(vals, dest_hot, np.ones(40, bool), 3, 8)
+    _assert_bucket_match(vals, dest_hot, np.ones(40, bool), 3, 40)
+    # original order within a destination is preserved on every path
+    send, svalid, _ = R.bucket_by_dest_counting(
+        jnp.asarray(np.arange(40, dtype=np.int32)[:, None]),
+        jnp.asarray(dest_hot), jnp.ones(40, bool), 3, 40,
+    )
+    got = np.asarray(send)[0, np.asarray(svalid)[0], 0]
+    np.testing.assert_array_equal(got, np.arange(40))
+
+
+# ----------------------------------------------------------- unique_compact
+@pytest.mark.parametrize("n,cap", [(17, 8), (100, 200), (64, 64), (33, 4)])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_unique_parity_random(n, cap, seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 40, n).astype(np.int32)
+    valid = rng.random(n) > 0.3
+    _assert_unique_match(vals, valid, cap)
+
+
+def test_unique_parity_edge_cases():
+    # all-invalid (empty relation)
+    _assert_unique_match(np.arange(16, dtype=np.int32),
+                         np.zeros(16, bool), 8)
+    # duplicate-heavy: one distinct value
+    _assert_unique_match(np.full(50, 7, np.int32), np.ones(50, bool), 16)
+    # exact-capacity overflow: more uniques than out_cap
+    vals = np.arange(30, dtype=np.int32)
+    _assert_unique_match(vals, np.ones(30, bool), 30)
+    _assert_unique_match(vals, np.ones(30, bool), 29)
+    # int64 values against the I64MAX pad (composite-key path)
+    rng = np.random.default_rng(3)
+    v64 = rng.integers(0, 1 << 40, 32).astype(np.int64)
+    _assert_unique_match(v64, rng.random(32) > 0.4, 16,
+                         pad=np.iinfo(np.int64).max)
+
+
+# ----------------------------------------------------------- batched (jit)
+def test_batched_wrappers_parity():
+    rng = np.random.default_rng(4)
+    w, n = 3, 64
+    lo = rng.integers(0, 30, (w, n)).astype(np.int32)
+    hi = lo + rng.integers(0, 4, (w, n)).astype(np.int32)
+    bl, bp, bv, bt = batched_expand(jnp.asarray(lo), jnp.asarray(hi), 128,
+                                    interpret=True)
+    vals = rng.integers(0, 99, (w, n, 2)).astype(np.int32)
+    dest = rng.integers(0, w, (w, n)).astype(np.int32)
+    valid = rng.random((w, n)) > 0.25
+    bs, bsv, bm = batched_bucket_by_dest(
+        jnp.asarray(vals), jnp.asarray(dest), jnp.asarray(valid), w, 32,
+        interpret=True,
+    )
+    bu, buv, bn = batched_unique_compact(
+        jnp.asarray(vals[:, :, 0]), jnp.asarray(valid), 32, I32MAX,
+        interpret=True,
+    )
+    for i in range(w):
+        rl, rp, rv, rt = R.expand(jnp.asarray(lo[i]), jnp.asarray(hi[i]), 128)
+        m = np.asarray(rv)
+        np.testing.assert_array_equal(np.asarray(bl[i])[m], np.asarray(rl)[m])
+        np.testing.assert_array_equal(np.asarray(bp[i])[m], np.asarray(rp)[m])
+        assert int(bt[i]) == int(rt)
+        rs, rsv, rm = R.bucket_by_dest(
+            jnp.asarray(vals[i]), jnp.asarray(dest[i]), jnp.asarray(valid[i]),
+            w, 32,
+        )
+        np.testing.assert_array_equal(np.asarray(bs[i]), np.asarray(rs))
+        np.testing.assert_array_equal(np.asarray(bsv[i]), np.asarray(rsv))
+        assert int(bm[i]) == int(rm)
+        ru, ruv, rn = R.unique_compact(
+            jnp.asarray(vals[i, :, 0]), jnp.asarray(valid[i]), 32, I32MAX
+        )
+        np.testing.assert_array_equal(np.asarray(bu[i]), np.asarray(ru))
+        np.testing.assert_array_equal(np.asarray(buv[i]), np.asarray(ruv))
+        assert int(bn[i]) == int(rn)
+
+
+# -------------------------------------------------------- engine-level alias
+def test_engine_data_plane_backend_alias():
+    from repro.core.engine import AdHashEngine
+
+    triples = np.array([[0, 2, 1], [1, 2, 0], [0, 3, 1]], np.int64)
+    eng = AdHashEngine(triples, 2, adaptive=False,
+                       data_plane_backend="pallas")
+    assert eng.data_plane_backend == "pallas"
+    assert eng.probe_backend == "pallas"  # alias stays consistent
+    assert eng.executor.backend == "pallas"
+    with pytest.raises(ValueError):
+        AdHashEngine(triples, 2, adaptive=False,
+                     probe_backend="searchsorted",
+                     data_plane_backend="pallas")
+
+
+# ------------------------------------------------------ hypothesis properties
+try:
+    import hypothesis  # noqa: F401
+
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dependency
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    _SETTINGS = dict(
+        deadline=None,
+        max_examples=15,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.data_too_large],
+    )
+
+    @given(
+        st.lists(st.tuples(st.integers(0, 50), st.integers(0, 6)),
+                 min_size=1, max_size=80),
+        st.integers(1, 96),
+    )
+    @settings(**_SETTINGS)
+    def test_expand_kernel_property(ranges, cap):
+        lo = np.array([r[0] for r in ranges], np.int32)
+        hi = lo + np.array([r[1] for r in ranges], np.int32)
+        _assert_expand_match(lo, hi, cap)
+
+    @given(
+        st.lists(st.tuples(st.integers(0, 99), st.integers(0, 5),
+                           st.booleans()),
+                 min_size=1, max_size=80),
+        st.integers(1, 6),
+        st.integers(1, 64),
+    )
+    @settings(**_SETTINGS)
+    def test_bucket_kernel_property(rows, w, cap_peer):
+        vals = np.array([[r[0]] for r in rows], np.int32)
+        dest = np.array([r[1] % w for r in rows], np.int32)
+        valid = np.array([r[2] for r in rows], bool)
+        _assert_bucket_match(vals, dest, valid, w, cap_peer)
+
+    @given(
+        st.lists(st.tuples(st.integers(0, 20), st.booleans()),
+                 min_size=1, max_size=80),
+        st.integers(1, 64),
+    )
+    @settings(**_SETTINGS)
+    def test_unique_kernel_property(rows, cap):
+        vals = np.array([r[0] for r in rows], np.int32)
+        valid = np.array([r[1] for r in rows], bool)
+        _assert_unique_match(vals, valid, cap)
