@@ -13,7 +13,12 @@ and recompile counts.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
+from pathlib import Path
 
 import numpy as np
 
@@ -162,6 +167,114 @@ def run_batched(n_workers: int = 8, n_per_template: int = 16
     return rows
 
 
+# --------------------------------------------------- ISSUE 4: sharded mesh
+_SHARDED_ARTIFACT = "artifacts/sharded_queries.json"
+
+
+def _sharded_child(out_path: str = _SHARDED_ARTIFACT, n_workers: int = 8,
+                   n_per_template: int = 8, trials: int = 3,
+                   n_devices: int = 8) -> None:
+    """Runs inside the forced-8-device subprocess: batched workload
+    throughput and comm accounting, mesh substrate vs single device."""
+    from repro.core.substrate import MeshSubstrate
+
+    import jax
+
+    got = len(jax.devices())
+    if got != n_devices:  # a pre-set XLA_FLAGS overrode the forced count
+        raise RuntimeError(
+            f"expected {n_devices} forced host devices, found {got}; "
+            "the artifact would measure the wrong topology"
+        )
+
+    d, triples = lubm_like(n_universities=2, depts_per_univ=2,
+                           profs_per_dept=2, students_per_prof=2)
+    wl = Workload(d, seed=2)
+    names = ["q1", "q7", "q12"]  # the instantiated (distributed-path) mix
+
+    def workload():
+        return [wl.templates[t].instantiate(wl.rng)
+                for t in names for _ in range(n_per_template)]
+
+    single = AdHashEngine(triples, n_workers, adaptive=False, capacity=64)
+    mesh = AdHashEngine(triples, n_workers, adaptive=False, capacity=64,
+                        substrate=MeshSubstrate())
+    for _ in range(2):  # warm both paths past retry doublings
+        single.query_batch(workload())
+        mesh.query_batch(workload())
+
+    n = len(names) * n_per_template
+    single_trials, mesh_trials, recompiles = [], [], 0
+    comm_single = comm_mesh = 0
+    for _ in range(trials):
+        qs = workload()  # identical list for both engines per trial
+        t0 = time.perf_counter()
+        res_s = single.query_batch(qs)
+        single_trials.append(time.perf_counter() - t0)
+        cache0 = be.probe_compile_cache_size()
+        t0 = time.perf_counter()
+        res_m = mesh.query_batch(qs)
+        mesh_trials.append(time.perf_counter() - t0)
+        recompiles += be.probe_compile_cache_size() - cache0
+        comm_single += sum(st.comm_cells for _, st in res_s)
+        comm_mesh += sum(st.comm_cells for _, st in res_m)
+
+    out = {
+        "n_devices": len(jax.devices()),
+        "n_workers": n_workers,
+        "n_queries_per_trial": n,
+        "trials": trials,
+        "single_qps": n / float(np.min(single_trials)),
+        "sharded_qps": n / float(np.min(mesh_trials)),
+        "comm_cells_single": comm_single,
+        "comm_cells_sharded": comm_mesh,
+        "post_warm_recompiles": recompiles,
+    }
+    Path(out_path).parent.mkdir(parents=True, exist_ok=True)
+    Path(out_path).write_text(json.dumps(out, indent=2))
+
+
+def run_sharded(n_devices: int = 8) -> list[tuple[str, float, str]]:
+    """Mesh-substrate workload throughput vs single device (ISSUE 4).
+
+    Spawns a subprocess with ``n_devices`` forced host devices (the flag
+    must precede jax initialization), which writes the JSON artifact
+    ``artifacts/sharded_queries.json``: queries/s and total comm cells for
+    the sharded and single-device engines, plus post-warmup recompiles
+    (must be zero).  Comm cells must match bit-for-bit — the collectives
+    change where bytes move, not how many."""
+    root = Path(__file__).resolve().parent.parent
+    env = {
+        **os.environ,
+        # appended last: XLA flag parsing is last-wins, so the forced count
+        # beats any same flag already exported (the child asserts it took)
+        "XLA_FLAGS": (os.environ.get("XLA_FLAGS", "") +
+                      f" --xla_force_host_platform_device_count={n_devices}"),
+        "PYTHONPATH": os.pathsep.join(
+            [str(root), str(root / "src"),
+             os.environ.get("PYTHONPATH", "")]),
+    }
+    subprocess.run(
+        [sys.executable, "-c",
+         "from benchmarks.bench_queries import _sharded_child; "
+         f"_sharded_child(n_devices={n_devices})"],
+        check=True, cwd=str(root), env=env, timeout=900,
+    )
+    data = json.loads((root / _SHARDED_ARTIFACT).read_text())
+    assert data["comm_cells_sharded"] == data["comm_cells_single"], data
+    w = data["n_workers"]
+    return [
+        (f"sharded/w{w}d{data['n_devices']}/single_device_qps",
+         data["single_qps"], f"n_queries={data['n_queries_per_trial']}"),
+        (f"sharded/w{w}d{data['n_devices']}/sharded_qps",
+         data["sharded_qps"],
+         f"comm_cells={data['comm_cells_sharded']}"
+         f" (=={data['comm_cells_single']} single)"),
+        (f"sharded/w{w}d{data['n_devices']}/post_warm_recompiles",
+         float(data["post_warm_recompiles"]), "must_be_zero"),
+    ]
+
+
 if __name__ == "__main__":
-    for r in run() + run_batched():
+    for r in run() + run_batched() + run_sharded():
         print(",".join(map(str, r)))

@@ -35,6 +35,8 @@ def main() -> None:
         bench_relalg.run,  # fused relalg primitives + recompile regression
         bench_queries.run,
         bench_queries.run_batched,  # batched vs sequential throughput
+        bench_queries.run_sharded,  # mesh substrate vs single device (JSON
+        #                             artifact: artifacts/sharded_queries.json)
         bench_adaptivity.run,
         bench_heuristics.run,
         bench_balance.run,

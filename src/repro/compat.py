@@ -1,0 +1,30 @@
+"""Version-compat shims shared across the tree (no side effects on import).
+
+Currently just one: ``shard_map``.  Both the LM model stack
+(``repro.models``) and the RDF execution substrate (``repro.core.substrate``)
+wrap per-shard bodies in shard_map; this module is the single definition of
+the cross-version spelling so the two layers can never drift.
+
+Kept outside ``repro.core`` on purpose: importing ``repro.core`` enables
+jax x64 globally, which the model stack must not inherit.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` across JAX versions.
+
+    Newer releases expose it at the top level with a ``check_vma`` flag;
+    older ones only have ``jax.experimental.shard_map.shard_map`` with the
+    equivalent flag spelled ``check_rep``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)

@@ -13,6 +13,9 @@ Modules:
   relation       fixed-capacity sharded intermediate results
   dsj            distributed semi-join stages (§4.1) — all_to_all vs all_gather
                  + vmap-lifted batched variants (multi-query execution)
+  substrate      execution substrate: single-device global view vs a real
+                 device mesh (W sharded on `data`, stages under shard_map,
+                 exchanges lowered to all_to_all/all_gather; DESIGN.md §6)
   executor       locality-aware distributed execution (Algorithm 1)
   batcher        workload shape-bucketing for batched multi-query dispatch
   planner        DP cost-based optimizer (§4.2, §4.3)

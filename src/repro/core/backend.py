@@ -24,7 +24,10 @@ Implementations self-register via :func:`register_impl`; the providers are
 imported lazily on first dispatch so importing this module stays cheap.  One
 backend name selects the whole data plane — ``AdHashEngine(
 data_plane_backend=...)`` (alias ``probe_backend``) threads it into every
-jitted stage as a static argument.
+jitted stage as a static argument.  Resolution is routed through the
+execution substrate (``Substrate.resolve_backend``), and the resolved name
+reaches the stage bodies *inside* ``shard_map`` on a mesh substrate — i.e.
+the Pallas kernels run per shard, against local worker blocks.
 
 The second half of the module is the static-shape discipline that keeps the
 jit cache warm: every dynamic capacity (planner hints, retry doubling, user
@@ -227,6 +230,11 @@ def probe_compile_cache_size() -> int:
         ]
     except ImportError:  # pragma: no cover - kernels package unavailable
         pass
+    # the mesh-substrate stage wrappers are entry points of their own: the
+    # sharded path is held to the same zero-recompile standard
+    from . import substrate as _substrate
+
+    fns += list(_substrate.SHARDED_STAGE_FNS)
     # _cache_size is a private jit API with no stability guarantee; degrade
     # to 0 (metric unavailable) rather than crash on a jax version bump
     return sum(getattr(f, "_cache_size", lambda: 0)() for f in fns)

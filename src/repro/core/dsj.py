@@ -1,18 +1,21 @@
 """Distributed Semi-Join data plane (paper §4.1, Algorithm 1 internals).
 
 Every stage is a pure, jitted global-view function over arrays with a leading
-worker axis W.  When those arrays are sharded over the mesh ``data`` axis the
-XLA SPMD partitioner lowers:
+worker axis W.  Executors never call these directly — dispatch goes through
+the execution substrate (``repro.core.substrate``): the single-device default
+runs them as-is, while ``MeshSubstrate`` wraps them in ``shard_map`` with W
+sharded on the mesh ``data`` axis, where
 
-  * the (W_sender, W_receiver) block transpose in ``exchange_hash`` /
-    ``reply_route`` to an **all_to_all** (the paper's hash distribution /
-    point-to-point candidate shipping),
-  * the sender-axis broadcast in ``exchange_broadcast`` to an **all_gather**
-    (the paper's projection-column broadcast).
+  * the (W_sender, W_receiver) block transpose in ``exchange_hash`` / the
+    ``probe_and_reply`` reply route becomes an **all_to_all** (the paper's
+    hash distribution / point-to-point candidate shipping),
+  * the sender-axis broadcast in ``exchange_broadcast`` becomes an
+    **all_gather** (the paper's projection-column broadcast)
 
-The choice between the two is exactly Observation 1 and is made by the
-locality-aware planner.  Each stage also returns the number of int32 cells it
-put on the wire, which the engine aggregates into the per-query communication
+— asserted on compiled HLO in tests/test_substrate_mesh.py.  The choice
+between the two is exactly Observation 1 and is made by the locality-aware
+planner.  Each stage also returns the number of int32 cells it put on the
+wire, which the engine aggregates into the per-query communication
 accounting used by the paper's experiments (Figs. 11b, 13b, 14b).
 """
 from __future__ import annotations
@@ -34,8 +37,10 @@ __all__ = [
     "jnp_hash_ids",
     "match_first",
     "project_unique",
+    "hash_send_buffers",
     "exchange_hash",
     "exchange_broadcast",
+    "reply_send_buffers",
     "probe_and_reply",
     "finalize_join",
     "local_probe_join",
@@ -179,6 +184,30 @@ def project_unique(
 
 
 # ------------------------------------------------------------------ exchanges
+def hash_send_buffers(
+    proj: jax.Array,  # (W_block, cap_proj) — all workers, or one mesh shard
+    proj_valid: jax.Array,
+    n_workers: int,  # global worker count (the hash modulus)
+    cap_peer: int,
+    backend: str = "searchsorted",
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-worker destination bucketing for the hash exchange.
+
+    Shared by ``exchange_hash`` (whole worker axis) and the mesh substrate
+    (local worker block, global destinations) — one definition, so the two
+    paths cannot drift.  Returns (send (W_block, n_workers, cap_peer),
+    send_valid, max_wanted (W_block,))."""
+
+    def per_worker(p_w, v_w):
+        dest = (jnp_hash_ids(p_w) % n_workers).astype(jnp.int32)
+        send, svalid, max_wanted = bucket_by_dest(
+            p_w[:, None], dest, v_w, n_workers, cap_peer, backend=backend
+        )
+        return send[..., 0], svalid, max_wanted
+
+    return jax.vmap(per_worker)(proj, proj_valid)
+
+
 @partial(jax.jit, static_argnames=("cap_peer", "backend"))
 def exchange_hash(
     proj: jax.Array,  # (W, cap_proj)
@@ -193,15 +222,8 @@ def exchange_hash(
     lowers to all_to_all under sharding.  Returns (recv (W_recv, W_send,
     cap_peer), recv_valid, cells_sent, max_bucket)."""
     w = proj.shape[0]
-
-    def per_worker(p_w, v_w):
-        dest = (jnp_hash_ids(p_w) % w).astype(jnp.int32)
-        send, svalid, max_wanted = bucket_by_dest(
-            p_w[:, None], dest, v_w, w, cap_peer, backend=backend
-        )
-        return send[..., 0], svalid, max_wanted
-
-    send, svalid, maxw = jax.vmap(per_worker)(proj, proj_valid)
+    send, svalid, maxw = hash_send_buffers(proj, proj_valid, w, cap_peer,
+                                           backend)
     # (W_sender, W_receiver, cap) -> (W_receiver, W_sender, cap): all_to_all
     recv = jnp.swapaxes(send, 0, 1)
     recv_valid = jnp.swapaxes(svalid, 0, 1)
@@ -227,6 +249,45 @@ def exchange_broadcast(
 
 
 # -------------------------------------------------------------- probe + reply
+def reply_send_buffers(
+    store: ShardedTripleStore,
+    recv: jax.Array,  # (W_block, n_send, cap_peer) — whole axis or one shard
+    recv_valid: jax.Array,
+    consts: jax.Array,
+    spec: PatternSpec,
+    probe_col: int,
+    cap_flat: int,
+    cap_cand: int,
+    backend: str = "searchsorted",
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Local semi-join probe + per-sender candidate bucketing — everything
+    ``probe_and_reply`` does before the reply-route transpose.  Shared with
+    the mesh substrate (local worker block, global senders) so the probe
+    semantics cannot drift between the two paths.
+
+    Returns (send (W_block, n_send, cap_cand, 3), send_valid,
+    totals (W_block,), max_bucket (W_block,))."""
+    w_block, n_send, cap_peer = recv.shape
+    flat_vals = recv.reshape(w_block, n_send * cap_peer)
+    flat_valid = recv_valid.reshape(w_block, n_send * cap_peer)
+    lo, hi = probe_values(
+        store, consts[P], flat_vals, flat_valid, col=probe_col,
+        nid=store.n_ids, backend=backend,
+    )
+    rows, src, valid, totals = gather_rows(
+        store, lo, hi, cap_flat, use_po=(probe_col == O), backend=backend
+    )
+    valid = _residual_mask(rows, valid, spec, consts, probed=(P, probe_col))
+    sender = src // cap_peer  # which sender's value produced this row
+
+    def per_worker(rows_w, sender_w, valid_w):
+        return bucket_by_dest(rows_w, sender_w, valid_w, n_send, cap_cand,
+                              backend=backend)
+
+    send, svalid, maxb = jax.vmap(per_worker)(rows, sender, valid)
+    return send, svalid, totals, maxb
+
+
 @partial(jax.jit, static_argnames=("spec", "probe_col", "cap_flat", "cap_cand",
                                    "backend"))
 def probe_and_reply(
@@ -245,24 +306,11 @@ def probe_and_reply(
 
     Returns (cand (W_sender, W_replier, cap_cand, 3), cand_valid, cells_sent,
     max_flat, max_bucket) — cand is already routed back (transposed)."""
-    w, n_send, cap_peer = recv.shape
-    flat_vals = recv.reshape(w, n_send * cap_peer)
-    flat_valid = recv_valid.reshape(w, n_send * cap_peer)
-    lo, hi = probe_values(
-        store, consts[P], flat_vals, flat_valid, col=probe_col,
-        nid=store.n_ids, backend=backend,
+    w = recv.shape[0]
+    send, svalid, totals, maxb = reply_send_buffers(
+        store, recv, recv_valid, consts, spec, probe_col, cap_flat, cap_cand,
+        backend,
     )
-    rows, src, valid, totals = gather_rows(
-        store, lo, hi, cap_flat, use_po=(probe_col == O), backend=backend
-    )
-    valid = _residual_mask(rows, valid, spec, consts, probed=(P, probe_col))
-    sender = src // cap_peer  # which sender's value produced this row
-
-    def per_worker(rows_w, sender_w, valid_w):
-        return bucket_by_dest(rows_w, sender_w, valid_w, n_send, cap_cand,
-                              backend=backend)
-
-    send, svalid, maxb = jax.vmap(per_worker)(rows, sender, valid)
     # (W_replier, W_sender, cap, 3) -> (W_sender, W_replier, cap, 3)
     cand = jnp.swapaxes(send, 0, 1)
     cand_valid = jnp.swapaxes(svalid, 0, 1)

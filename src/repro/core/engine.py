@@ -21,7 +21,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .backend import quantize_capacity, resolve_backend
+from .backend import quantize_capacity
 from .batcher import WorkloadBatcher
 from .dictionary import Dictionary
 from .executor import Executor, ExecutorError, QueryStats
@@ -34,7 +34,7 @@ from .query import Query, TriplePattern, Var
 from .relation import Relation
 from .stats import GlobalStats, compute_stats
 from .transform import build_redistribution_tree
-from .triples import ShardedTripleStore, match_ranges
+from .triples import ShardedTripleStore
 
 __all__ = ["AdHashEngine", "EngineReport"]
 
@@ -78,7 +78,10 @@ class AdHashEngine:
         use_count_oracle: bool = True,
         probe_backend: str = "auto",
         data_plane_backend: str | None = None,
+        substrate=None,
     ):
+        from .substrate import SingleDeviceSubstrate
+
         t0 = time.perf_counter()
         triples = np.asarray(triples)
         self.w = n_workers
@@ -88,10 +91,20 @@ class AdHashEngine:
         self.budget = replication_budget
         self.heuristic = heuristic
         self.capacity = quantize_capacity(capacity)
+        # execution substrate: where the worker axis W physically lives.
+        # The single-device default preserves pre-substrate behavior
+        # exactly; a MeshSubstrate shards W over the mesh ``data`` axis and
+        # runs every DSJ stage under shard_map (exchanges -> all_to_all /
+        # all_gather).  See repro.core.substrate.
+        self.substrate = substrate if substrate is not None else \
+            SingleDeviceSubstrate()
+        self.substrate.check_workers(n_workers)
         # one concrete data-plane backend per engine: the plain-jnp path or
         # the fused Pallas kernels ('auto' = platform default).  It covers
         # index probes *and* the relalg primitives; ``data_plane_backend``
         # is the canonical name, ``probe_backend`` the historical alias.
+        # Resolution is per-substrate: the chosen backend executes *inside*
+        # the per-shard stage bodies on a mesh substrate.
         if data_plane_backend is not None and probe_backend not in (
             "auto", data_plane_backend
         ):
@@ -99,34 +112,35 @@ class AdHashEngine:
                 f"conflicting backends: probe_backend={probe_backend!r} "
                 f"vs data_plane_backend={data_plane_backend!r}"
             )
-        self.probe_backend = resolve_backend(data_plane_backend or
-                                             probe_backend)
+        self.probe_backend = self.substrate.resolve_backend(
+            data_plane_backend or probe_backend
+        )
         self.data_plane_backend = self.probe_backend
 
         # --- bootstrap (paper §3.4): partition, load, collect statistics
         self.n_ids = int(triples.max()) + 1 if triples.size else 1
         assign = partition_by_subject(triples, n_workers)
-        self.store = ShardedTripleStore.build(
+        self.store = self.substrate.shard_store(ShardedTripleStore.build(
             triples, assign, n_workers, self.n_ids
-        )
+        ))
         self.stats: GlobalStats = compute_stats(triples, self.n_ids)
 
         oracle = self._count_pattern if use_count_oracle else None
         self.planner = LocalityAwarePlanner(self.stats, n_workers, oracle)
         self.executor = Executor(
             self.store, n_workers, locality_aware, pinned_opt,
-            probe_backend=self.probe_backend,
+            probe_backend=self.probe_backend, substrate=self.substrate,
         )
         self.heatmap = HeatMap()
         self.pattern_index = PatternIndex()
         self.replicas = ReplicaIndex(n_workers)
         self.parallel_exec = ParallelExecutor(
             self.store, self.replicas, n_workers,
-            probe_backend=self.probe_backend,
+            probe_backend=self.probe_backend, substrate=self.substrate,
         )
         self.ird = IncrementalRedistributor(
             self.store, self.replicas, n_workers, self.capacity,
-            probe_backend=self.probe_backend,
+            probe_backend=self.probe_backend, substrate=self.substrate,
         )
         self._no_redistribute: set = set()
         self.report = EngineReport()
@@ -142,18 +156,19 @@ class AdHashEngine:
         spec = dsj.PatternSpec.of(q)
         consts = dsj.pattern_consts(q)
         be = self.probe_backend
+        ranges = self.substrate.match_ranges
         if spec.p_const and spec.s_const:
-            lo, hi = match_ranges(self.store, consts[1], consts[0],
-                                  use_po=False, nid=self.n_ids, backend=be)
+            lo, hi = ranges(self.store, consts[1], consts[0],
+                            use_po=False, nid=self.n_ids, backend=be)
         elif spec.p_const and spec.o_const:
-            lo, hi = match_ranges(self.store, consts[1], consts[2],
-                                  use_po=True, nid=self.n_ids, backend=be)
+            lo, hi = ranges(self.store, consts[1], consts[2],
+                            use_po=True, nid=self.n_ids, backend=be)
         elif spec.p_const:
-            lo, hi = match_ranges(self.store, consts[1], jnp.int32(-1),
-                                  use_po=False, nid=self.n_ids, backend=be)
+            lo, hi = ranges(self.store, consts[1], jnp.int32(-1),
+                            use_po=False, nid=self.n_ids, backend=be)
         else:
-            lo, hi = match_ranges(self.store, jnp.int32(-1), jnp.int32(-1),
-                                  use_po=False, nid=self.n_ids, backend=be)
+            lo, hi = ranges(self.store, jnp.int32(-1), jnp.int32(-1),
+                            use_po=False, nid=self.n_ids, backend=be)
         return int(jnp.sum(hi - lo))
 
     # ------------------------------------------------------------------ query

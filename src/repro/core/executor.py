@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import dsj
-from .backend import quantize_capacity, resolve_backend
+from .backend import quantize_capacity
 from .query import O, P, S, Query, TriplePattern, Var
 from .relation import Relation
 from .triples import ShardedTripleStore
@@ -120,6 +120,13 @@ class Executor:
     run 'searchsorted' or 'pallas' per the registry in repro.core.backend;
     all capacities are quantized to power-of-two classes so same-shape
     queries share compiled stages.
+
+    ``substrate`` decides where the worker axis W physically lives: the
+    default single-device substrate runs the plain global-view stages;
+    a :class:`repro.core.substrate.MeshSubstrate` runs every stage under
+    ``shard_map`` with W sharded on the mesh ``data`` axis, lowering the
+    DSJ exchanges to all_to_all / all_gather.  The executor never calls a
+    dsj stage directly — all data-plane dispatch goes through the substrate.
     """
 
     def __init__(
@@ -129,12 +136,18 @@ class Executor:
         locality_aware: bool = True,
         pinned_opt: bool = True,
         probe_backend: str = "auto",
+        substrate=None,
     ):
+        from .substrate import SingleDeviceSubstrate
+
         self.store = store
         self.w = n_workers
         self.locality_aware = locality_aware
         self.pinned_opt = pinned_opt
-        self.backend = resolve_backend(probe_backend)
+        self.sub = substrate if substrate is not None else \
+            SingleDeviceSubstrate()
+        self.sub.check_workers(n_workers)
+        self.backend = self.sub.resolve_backend(probe_backend)
 
     # ------------------------------------------------------------ first match
     def _match_first(self, q: TriplePattern, cap: int, stats: QueryStats
@@ -142,8 +155,9 @@ class Executor:
         spec = dsj.PatternSpec.of(q)
         consts = dsj.pattern_consts(q)
         for _ in range(_MAX_RETRIES):
-            cols, valid, total = dsj.match_first(self.store, consts, spec, cap,
-                                                 backend=self.backend)
+            cols, valid, total = self.sub.match_first(
+                self.store, consts, spec, cap, backend=self.backend
+            )
             if int(total) <= cap:
                 # keep one column per distinct variable (handles ?x p ?x)
                 keep, vars_ = q.distinct_var_cols()
@@ -176,7 +190,7 @@ class Executor:
             stats.n_local_joins += 1
             stats.plan.append(f"local-join on {join_var}")
             for _ in range(_MAX_RETRIES):
-                cols, valid, total = dsj.local_probe_join(
+                cols, valid, total = self.sub.local_probe_join(
                     self.store, rel.cols, rel.valid, consts, spec,
                     c1, c2, checks, append_cols, cap, backend=self.backend,
                 )
@@ -194,7 +208,7 @@ class Executor:
         )
         cap_proj = quantize_capacity(cap)
         for _ in range(_MAX_RETRIES):
-            proj, pvalid, nuniq = dsj.project_unique(
+            proj, pvalid, nuniq = self.sub.project_unique(
                 rel.cols, rel.valid, c1, cap_proj, backend=self.backend
             )
             if int(nuniq) <= cap_proj:
@@ -207,7 +221,7 @@ class Executor:
         if hash_mode:
             cap_peer = cap_proj
             for _ in range(_MAX_RETRIES):
-                recv, rvalid, cells, maxb = dsj.exchange_hash(
+                recv, rvalid, cells, maxb = self.sub.exchange_hash(
                     proj, pvalid, cap_peer, backend=self.backend
                 )
                 if int(maxb) <= cap_peer:
@@ -218,12 +232,12 @@ class Executor:
                 raise ExecutorError("hash exchange exceeded retry budget")
             stats.comm_cells += int(cells)
         else:
-            recv, rvalid, cells = dsj.exchange_broadcast(proj, pvalid)
+            recv, rvalid, cells = self.sub.exchange_broadcast(proj, pvalid)
             stats.comm_cells += int(cells)
 
         cap_flat = cap_cand = quantize_capacity(cap)
         for _ in range(_MAX_RETRIES):
-            cand, cvalid, cells, maxf, maxc = dsj.probe_and_reply(
+            cand, cvalid, cells, maxf, maxc = self.sub.probe_and_reply(
                 self.store, recv, rvalid, consts, spec, c2, cap_flat, cap_cand,
                 backend=self.backend,
             )
@@ -239,7 +253,7 @@ class Executor:
         stats.comm_cells += int(cells)
 
         for _ in range(_MAX_RETRIES):
-            cols, valid, total = dsj.finalize_join(
+            cols, valid, total = self.sub.finalize_join(
                 rel.cols, rel.valid, cand, cvalid, c1, c2, checks,
                 append_cols, cap, backend=self.backend,
             )
@@ -305,7 +319,7 @@ class Executor:
 
         cap = bplan.capacity
         for _ in range(_MAX_RETRIES):
-            cols, valid, totals = dsj.match_first_batch(
+            cols, valid, totals = self.sub.match_first_batch(
                 self.store, consts_j[:, 0], bplan.first_spec, cap,
                 backend=self.backend,
             )
@@ -353,7 +367,7 @@ class Executor:
             st.n_local_joins += 1
             st.plan.append(f"local-join on {sp.join_var}")
         for _ in range(_MAX_RETRIES):
-            cols, valid, totals = dsj.local_probe_join_batch(
+            cols, valid, totals = self.sub.local_probe_join_batch(
                 self.store, rel_cols, rel_valid, qc, sp.spec, sp.c1, sp.c2,
                 sp.checks, sp.append_cols, cap, backend=self.backend,
             )
@@ -376,7 +390,7 @@ class Executor:
 
         cap_proj = quantize_capacity(cap)
         for _ in range(_MAX_RETRIES):
-            proj, pvalid, nuniq = dsj.project_unique_batch(
+            proj, pvalid, nuniq = self.sub.project_unique_batch(
                 rel_cols, rel_valid, sp.c1, cap_proj, backend=self.backend
             )
             nu = int(jnp.max(nuniq))
@@ -391,7 +405,7 @@ class Executor:
         if hash_mode:
             cap_peer = cap_proj
             for _ in range(_MAX_RETRIES):
-                recv, rvalid, cells, maxb = dsj.exchange_hash_batch(
+                recv, rvalid, cells, maxb = self.sub.exchange_hash_batch(
                     proj, pvalid, cap_peer, backend=self.backend
                 )
                 mb = int(jnp.max(maxb))
@@ -403,14 +417,14 @@ class Executor:
             else:
                 raise ExecutorError("batched hash exchange exceeded retries")
         else:
-            recv, rvalid, cells = dsj.exchange_broadcast_batch(proj, pvalid)
+            recv, rvalid, cells = self.sub.exchange_broadcast_batch(proj, pvalid)
         cells_np = np.asarray(cells)
         for i in range(b):
             stats[i].comm_cells += int(cells_np[i])
 
         cap_flat = cap_cand = quantize_capacity(cap)
         for _ in range(_MAX_RETRIES):
-            cand, cvalid, cells, maxf, maxc = dsj.probe_and_reply_batch(
+            cand, cvalid, cells, maxf, maxc = self.sub.probe_and_reply_batch(
                 self.store, recv, rvalid, qc, sp.spec, sp.c2, cap_flat,
                 cap_cand, backend=self.backend,
             )
@@ -430,7 +444,7 @@ class Executor:
             stats[i].comm_cells += int(cells_np[i])
 
         for _ in range(_MAX_RETRIES):
-            cols, valid, totals = dsj.finalize_join_batch(
+            cols, valid, totals = self.sub.finalize_join_batch(
                 rel_cols, rel_valid, cand, cvalid, sp.c1, sp.c2, sp.checks,
                 sp.append_cols, cap, backend=self.backend,
             )

@@ -18,6 +18,13 @@ around the bindings of the core vertex, level by level:
 
 Replicas are maintained as raw triples in segregated storage modules so the
 normal index machinery (and eviction) applies — paper §5.5.
+
+The DSJ stages run through the execution substrate, so under a mesh
+substrate IRD's own exchanges lower to the same collectives as query
+evaluation; freshly built replica modules are re-placed on the substrate
+(``shard_store``) before they serve parallel-mode queries.  The remaining
+host-driven glue (the phase-1 triple re-hash, ``from_device_rows``) runs
+eagerly — it is the bootstrap path, executed once per redistribution.
 """
 from __future__ import annotations
 
@@ -26,7 +33,7 @@ from dataclasses import dataclass, field
 import jax.numpy as jnp
 
 from . import dsj
-from .backend import quantize_capacity, resolve_backend
+from .backend import quantize_capacity
 from .heatmap import HotPattern
 from .pattern_index import ReplicaIndex
 from .query import O, S, TriplePattern, Var
@@ -57,12 +64,17 @@ class IncrementalRedistributor:
         n_workers: int,
         capacity: int = 1 << 12,
         probe_backend: str = "auto",
+        substrate=None,
     ):
+        from .substrate import SingleDeviceSubstrate
+
         self.main = main
         self.replicas = replicas
         self.w = n_workers
         self.cap = quantize_capacity(capacity)
-        self.backend = resolve_backend(probe_backend)
+        self.sub = substrate if substrate is not None else \
+            SingleDeviceSubstrate()
+        self.backend = self.sub.resolve_backend(probe_backend)
 
     # ------------------------------------------------------------- top level
     def redistribute(self, hot: HotPattern) -> tuple[dict[int, str | None], IRDStats]:
@@ -116,7 +128,7 @@ class IncrementalRedistributor:
         consts = dsj.pattern_consts(q)
         cap = self.cap
         for _ in range(_MAX_RETRIES):
-            _, valid, total = dsj.match_rows(self.main, consts, spec, cap,
+            _, valid, total = self.sub.match_rows(self.main, consts, spec, cap,
                                              backend=self.backend)
             if int(total) <= cap:
                 return int(jnp.sum(valid))
@@ -132,7 +144,7 @@ class IncrementalRedistributor:
         consts = dsj.pattern_consts(q)
         cap = self.cap
         for _ in range(_MAX_RETRIES):
-            rows, valid, total = dsj.match_rows(self.main, consts, spec, cap,
+            rows, valid, total = self.sub.match_rows(self.main, consts, spec, cap,
                                                 backend=self.backend)
             if int(total) <= cap:
                 break
@@ -161,6 +173,7 @@ class IncrementalRedistributor:
         diag = jnp.sum(svalid[jnp.arange(w), jnp.arange(w)])
         stats.comm_cells += int((jnp.sum(svalid) - diag) * 3)
         st = ShardedTripleStore.from_device_rows(recv, rvalid, self.main.n_ids)
+        st = self.sub.shard_store(st)
         stats.triples_indexed += int(jnp.sum(st.counts))
         sid = self.replicas.new_id()
         self.replicas.put(sid, st)
@@ -183,7 +196,7 @@ class IncrementalRedistributor:
         pconsts = dsj.pattern_consts(parent_q)
         cap = self.cap
         for _ in range(_MAX_RETRIES):
-            prows, pvalid, total = dsj.match_rows(pstore, pconsts, pspec, cap,
+            prows, pvalid, total = self.sub.match_rows(pstore, pconsts, pspec, cap,
                                                   backend=self.backend)
             if int(total) <= cap:
                 break
@@ -192,7 +205,7 @@ class IncrementalRedistributor:
         # project + dedupe the propagating column
         cap_proj = cap
         for _ in range(_MAX_RETRIES):
-            proj, projv, nuniq = dsj.project_unique(
+            proj, projv, nuniq = self.sub.project_unique(
                 prows, pvalid, prop_col, cap_proj, backend=self.backend
             )
             if int(nuniq) <= cap_proj:
@@ -204,7 +217,7 @@ class IncrementalRedistributor:
         if src_col == S:
             cap_peer = cap_proj
             for _ in range(_MAX_RETRIES):
-                recv, rvalid, cells, maxb = dsj.exchange_hash(
+                recv, rvalid, cells, maxb = self.sub.exchange_hash(
                     proj, projv, cap_peer, backend=self.backend
                 )
                 if int(maxb) <= cap_peer:
@@ -212,14 +225,14 @@ class IncrementalRedistributor:
                 cap_peer = quantize_capacity(max(cap_peer * 2, int(maxb)))
             stats.comm_cells += int(cells)
         else:
-            recv, rvalid, cells = dsj.exchange_broadcast(proj, projv)
+            recv, rvalid, cells = self.sub.exchange_broadcast(proj, projv)
             stats.comm_cells += int(cells)
 
         spec = dsj.PatternSpec.of(q)
         consts = dsj.pattern_consts(q)
         cap_flat = cap_cand = self.cap
         for _ in range(_MAX_RETRIES):
-            cand, cvalid, cells, maxf, maxc = dsj.probe_and_reply(
+            cand, cvalid, cells, maxf, maxc = self.sub.probe_and_reply(
                 self.main, recv, rvalid, consts, spec, src_col,
                 cap_flat, cap_cand, backend=self.backend,
             )
@@ -234,6 +247,7 @@ class IncrementalRedistributor:
         flat = cand.reshape(self.w, -1, 3)
         flatv = cvalid.reshape(self.w, -1)
         st = ShardedTripleStore.from_device_rows(flat, flatv, self.main.n_ids)
+        st = self.sub.shard_store(st)
         stats.triples_indexed += int(jnp.sum(st.counts))
         sid = self.replicas.new_id()
         self.replicas.put(sid, st)

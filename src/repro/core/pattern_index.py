@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import dsj
-from .backend import quantize_capacity, resolve_backend
+from .backend import quantize_capacity
 from .executor import ExecutorError, QueryStats, _append_plan, _shared_checks
 from .heatmap import EdgeKey
 from .query import Const, O, Query, S, Term, TriplePattern, Var
@@ -224,7 +224,9 @@ class ParallelExecutor:
 
     Walks the query's redistribution tree in DFS order; every join is a
     local probe against either the main index (edges whose subject is the
-    core) or the matched PI edge's replica module.  Zero communication.
+    core) or the matched PI edge's replica module.  Zero communication —
+    under a mesh substrate every probe stays inside its shard (no
+    collectives in the lowered stages).
     """
 
     def __init__(
@@ -233,11 +235,16 @@ class ParallelExecutor:
         replicas: ReplicaIndex,
         n_workers: int,
         probe_backend: str = "auto",
+        substrate=None,
     ):
+        from .substrate import SingleDeviceSubstrate
+
         self.main = main
         self.replicas = replicas
         self.w = n_workers
-        self.backend = resolve_backend(probe_backend)
+        self.sub = substrate if substrate is not None else \
+            SingleDeviceSubstrate()
+        self.backend = self.sub.resolve_backend(probe_backend)
 
     def _store_for(self, qedge: TreeEdge, pie: PIEdge, depth: int
                    ) -> ShardedTripleStore:
@@ -291,8 +298,9 @@ class ParallelExecutor:
     # ------------------------------------------------------------- internals
     def _first(self, store, q, spec, consts, cap, stats) -> Relation:
         for _ in range(_MAX_RETRIES):
-            cols, valid, total = dsj.match_first(store, consts, spec, cap,
-                                                 backend=self.backend)
+            cols, valid, total = self.sub.match_first(store, consts, spec,
+                                                      cap,
+                                                      backend=self.backend)
             if int(total) <= cap:
                 keep, vars_ = q.distinct_var_cols()
                 if len(keep) != len(q.var_cols()):
@@ -309,7 +317,7 @@ class ParallelExecutor:
         checks = _shared_checks(rel.vars, q, join_var)
         append_cols, out_vars = _append_plan(rel.vars, q)
         for _ in range(_MAX_RETRIES):
-            cols, valid, total = dsj.local_probe_join(
+            cols, valid, total = self.sub.local_probe_join(
                 store, rel.cols, rel.valid, consts, spec, c1, probe_col,
                 checks, append_cols, cap, backend=self.backend,
             )

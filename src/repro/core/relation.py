@@ -54,6 +54,17 @@ class Relation:
     def total(self) -> jax.Array:
         return jnp.sum(self.valid)
 
+    # ------------------------------------------------------------- placement
+    def device_put(self, sharding) -> "Relation":
+        """Place the binding table under ``sharding`` (worker axis on the
+        substrate mesh); stage outputs already carry it, this is for
+        relations built host-side."""
+        return Relation(
+            jax.device_put(self.cols, sharding),
+            jax.device_put(self.valid, sharding),
+            self.vars,
+        )
+
     # ------------------------------------------------------------ host utils
     def to_numpy(self) -> np.ndarray:
         """All valid binding rows concatenated across workers (host-side)."""

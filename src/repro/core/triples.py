@@ -158,6 +158,17 @@ class ShardedTripleStore:
             n_ids=n_ids,
         )
 
+    # ----------------------------------------------------------- placement
+    def device_put(self, sharding) -> "ShardedTripleStore":
+        """Place every per-worker array under ``sharding`` (e.g. a
+        ``NamedSharding`` with W on the mesh ``data`` axis).  The worker
+        count must be divisible by the number of shards; device d then owns
+        the contiguous worker block [d*W/D, (d+1)*W/D)."""
+        leaves, aux = self.tree_flatten()
+        return type(self).tree_unflatten(
+            aux, tuple(jax.device_put(x, sharding) for x in leaves)
+        )
+
     # ------------------------------------------------- host-side utilities
     def to_numpy(self) -> np.ndarray:
         """All live triples, host-side (tests / collection)."""

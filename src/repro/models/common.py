@@ -13,6 +13,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# single definition of the cross-version shard_map spelling, shared with the
+# RDF execution substrate (repro.core.substrate); re-exported for callers
+from repro.compat import shard_map
+
 __all__ = [
     "MoEConfig",
     "SSMConfig",
@@ -28,21 +32,6 @@ __all__ = [
     "shape_of",
     "shard_map",
 ]
-
-
-def shard_map(fn, *, mesh, in_specs, out_specs, check_vma: bool = False):
-    """``jax.shard_map`` across JAX versions.
-
-    Newer releases expose it at the top level with a ``check_vma`` flag;
-    older ones only have ``jax.experimental.shard_map.shard_map`` with the
-    equivalent flag spelled ``check_rep``."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=check_vma)
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
-                      out_specs=out_specs, check_rep=check_vma)
 
 
 @dataclass(frozen=True)
