@@ -111,24 +111,30 @@ def _bench_one_mix(
     seq_trials, bat_trials = [], []
     recompiles = 0  # batched-path only: seq and bat share one jit cache
     dispatches0 = bat.report.n_batch_dispatches
-    for _ in range(5):
+    trials, reps = 7, 4  # reps lengthen each timed window past scheduler
+    #                      jitter (a 48-query batched pass is ~50 ms alone)
+    for _ in range(trials):
         # identical query list for both paths: apples-to-apples per trial
         qs = workload()
         t0 = time.perf_counter()
-        for q in qs:
-            seq.query(q)
+        for _ in range(reps):
+            for q in qs:
+                seq.query(q)
         seq_trials.append(time.perf_counter() - t0)
         cache0 = be.probe_compile_cache_size()
         t0 = time.perf_counter()
-        bat.query_batch(qs)
+        for _ in range(reps):
+            bat.query_batch(qs)
         bat_trials.append(time.perf_counter() - t0)
         recompiles += be.probe_compile_cache_size() - cache0
-    # best-of-5 (timeit practice): scheduler contention only ever adds time
-    seq_s = float(np.min(seq_trials))
-    bat_s = float(np.min(bat_trials))
+    # median, not best-of: the CI perf gate diffs these against a
+    # checked-in baseline, so the statistic must be stable across runs on
+    # a shared host, not the luckiest scheduling window
+    seq_s = float(np.median(seq_trials)) / reps
+    bat_s = float(np.median(bat_trials)) / reps
     seq_qps = n / seq_s
     bat_qps = n / bat_s
-    n_disp = (bat.report.n_batch_dispatches - dispatches0) // len(bat_trials)
+    n_disp = (bat.report.n_batch_dispatches - dispatches0) // (trials * reps)
     return [
         (f"batch/{tag}/w{n_workers}/sequential_qps", seq_qps,
          f"us_per_query={seq_s * 1e6 / n:.1f}"),
@@ -172,7 +178,7 @@ _SHARDED_ARTIFACT = "artifacts/sharded_queries.json"
 
 
 def _sharded_child(out_path: str = _SHARDED_ARTIFACT, n_workers: int = 8,
-                   n_per_template: int = 8, trials: int = 3,
+                   n_per_template: int = 8, trials: int = 7,
                    n_devices: int = 8) -> None:
     """Runs inside the forced-8-device subprocess: batched workload
     throughput and comm accounting, mesh substrate vs single device."""
@@ -206,26 +212,33 @@ def _sharded_child(out_path: str = _SHARDED_ARTIFACT, n_workers: int = 8,
     n = len(names) * n_per_template
     single_trials, mesh_trials, recompiles = [], [], 0
     comm_single = comm_mesh = 0
+    reps = 4  # lengthen each timed window past scheduler jitter
     for _ in range(trials):
         qs = workload()  # identical list for both engines per trial
         t0 = time.perf_counter()
-        res_s = single.query_batch(qs)
-        single_trials.append(time.perf_counter() - t0)
+        for _ in range(reps):
+            res_s = single.query_batch(qs)
+        single_trials.append((time.perf_counter() - t0) / reps)
         cache0 = be.probe_compile_cache_size()
         t0 = time.perf_counter()
-        res_m = mesh.query_batch(qs)
-        mesh_trials.append(time.perf_counter() - t0)
+        for _ in range(reps):
+            res_m = mesh.query_batch(qs)
+        mesh_trials.append((time.perf_counter() - t0) / reps)
         recompiles += be.probe_compile_cache_size() - cache0
         comm_single += sum(st.comm_cells for _, st in res_s)
         comm_mesh += sum(st.comm_cells for _, st in res_m)
 
+    # median, not best-of: the 8-device collective rendezvous makes per-trial
+    # times heavy-tailed on a shared host (occasional lucky-scheduling
+    # outliers), and the CI perf gate needs a statistic that is stable
+    # across runs, not the luckiest window
     out = {
         "n_devices": len(jax.devices()),
         "n_workers": n_workers,
         "n_queries_per_trial": n,
         "trials": trials,
-        "single_qps": n / float(np.min(single_trials)),
-        "sharded_qps": n / float(np.min(mesh_trials)),
+        "single_qps": n / float(np.median(single_trials)),
+        "sharded_qps": n / float(np.median(mesh_trials)),
         "comm_cells_single": comm_single,
         "comm_cells_sharded": comm_mesh,
         "post_warm_recompiles": recompiles,

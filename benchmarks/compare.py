@@ -1,0 +1,178 @@
+"""CI perf-regression gate: diff a bench run against the checked-in baseline.
+
+Usage::
+
+    python -m benchmarks.compare BENCH_BASELINE.json BENCH_PR.json \
+        [--qps-tolerance 0.15]
+
+Both files are the ``--json`` output of ``benchmarks/run.py`` (row name ->
+{"value", "derived"}).  The gate fails (exit 1) when, for any row present in
+*both* files:
+
+  * a throughput metric (name ending in ``_qps`` or ``_x``) drops by more
+    than the tolerance (default 15%) relative to the baseline, or
+  * a recompile counter *increases* at all — either a row named after one
+    (name containing ``recompile``) or a post-warmup compile count embedded
+    in a row's derived text (``new_compiles=N`` /
+    ``post_warm_recompiles=N``, the probe/relalg cache-discipline metrics).
+    Post-warmup recompiles are a correctness-of-discipline metric, not a
+    noisy timing, so the tolerance is zero.
+
+Rows only in one file are reported but never fail the gate: new benchmarks
+land with their first baseline, and retired ones drop out.  Lower-is-better
+timing rows (``_us`` suffixes) are deliberately *not* gated — wall-clock
+microseconds on shared CI runners are too noisy; the qps rows are measured
+best-of-N exactly to be gateable.
+
+**Machine-speed normalization** (default on): shared CI runners and dev
+boxes differ in clock speed and load, and that shift moves *every* qps row
+together.  The gate therefore computes the median cur/baseline ratio across
+all throughput rows and attributes it to the machine, gating each row only
+on its *residual* deviation below that median.  A uniformly slower runner
+gates nothing; one benchmark dropping 15% below the rest of the fleet
+fails.  The blind spot is accepted deliberately: a regression hitting the
+*median row or more* — half the gated qps rows, or one change slowing
+everything by the same factor — is indistinguishable from a slower machine
+by timing alone and gates green.  Localized regressions (one subsystem, a
+minority of rows — the overwhelmingly common case, since the rows come
+from several independent benches) are what the normalized gate catches;
+broad ones are covered by the hardware-portable rows, the ``speedup_x``
+ratios and recompile counters, which always gate un-normalized.  Pass
+``--no-normalize`` for same-machine comparisons (stronger: absolute qps
+gates directly, no blind spot).
+
+The baseline is tied to the hardware it was measured on.  Refresh it after
+an intentional perf change — or when CI hardware shifts — from a trusted
+run (locally, or by committing the ``BENCH_PR.json`` from a green
+main-branch bench artifact)::
+
+    python -m benchmarks.run --fast --json BENCH_BASELINE.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+# post-warmup compile counters riding inside derived strings (warmup-phase
+# "compiles=N" is deliberately excluded: new jitted stages legitimately
+# change it, and it is refreshed with the baseline)
+_DERIVED_COUNTER = re.compile(
+    r"\b(new_compiles|post_warm(?:up)?_recompiles)=(\d+)"
+)
+
+
+def _is_qps(name: str) -> bool:
+    return name.endswith("_qps") or name.endswith("_x")
+
+
+def _is_recompile(name: str) -> bool:
+    return "recompile" in name
+
+
+def _derived_counters(derived: str) -> dict[str, int]:
+    return {k: int(v) for k, v in _DERIVED_COUNTER.findall(derived or "")}
+
+
+def _is_ratio(name: str) -> bool:
+    """Hardware-portable throughput ratios (numerator and denominator are
+    measured in the same run, so machine speed cancels): never normalized."""
+    return name.endswith("_x")
+
+
+def compare(baseline: dict, current: dict, qps_tolerance: float = 0.15,
+            normalize: bool = True) -> tuple[list[str], list[str], int]:
+    """Returns (failures, notes, n_gated) — n_gated counts the shared rows
+    the gate actually examined (throughput rows, recompile rows, and rows
+    carrying embedded compile counters)."""
+    failures: list[str] = []
+    notes: list[str] = []
+    n_gated = 0
+    shared = sorted(set(baseline) & set(current))
+
+    # median machine-speed shift over the absolute qps rows (see module
+    # docstring); ratio rows and counters are gated un-normalized
+    calib = 1.0
+    if normalize:
+        shifts = sorted(
+            current[n]["value"] / baseline[n]["value"]
+            for n in shared
+            if _is_qps(n) and not _is_ratio(n) and baseline[n]["value"] > 0
+        )
+        if shifts:
+            mid = len(shifts) // 2
+            calib = (shifts[mid] if len(shifts) % 2
+                     else (shifts[mid - 1] + shifts[mid]) / 2)
+
+    for name in shared:
+        base = baseline[name]["value"]
+        cur = current[name]["value"]
+        base_counters = _derived_counters(baseline[name].get("derived", ""))
+        cur_counters = _derived_counters(current[name].get("derived", ""))
+        if _is_qps(name) or _is_recompile(name) or cur_counters:
+            n_gated += 1
+        for key, cur_n in cur_counters.items():
+            base_n = base_counters.get(key)
+            if base_n is not None and cur_n > base_n:
+                failures.append(
+                    f"{name}: {key} increased {base_n} -> {cur_n}"
+                )
+        if _is_recompile(name):
+            if cur > base:
+                failures.append(
+                    f"{name}: post-warmup recompiles increased "
+                    f"{base:g} -> {cur:g}"
+                )
+            continue
+        if _is_qps(name):
+            scale = 1.0 if _is_ratio(name) else calib
+            adj = cur / scale
+            floor = base * (1.0 - qps_tolerance)
+            if adj < floor:
+                failures.append(
+                    f"{name}: {cur:.1f} ({adj:.1f} machine-normalized) is "
+                    f"{100 * (1 - adj / base):.1f}% below baseline "
+                    f"{base:.1f} (tolerance {qps_tolerance:.0%})"
+                )
+            else:
+                notes.append(f"{name}: {base:.1f} -> {cur:.1f} ok")
+    if normalize and calib != 1.0:
+        notes.append(f"(median machine-speed shift: {calib:.2f}x)")
+    for name in sorted(set(current) - set(baseline)):
+        notes.append(f"{name}: new metric (no baseline yet)")
+    for name in sorted(set(baseline) - set(current)):
+        notes.append(f"{name}: missing from current run")
+    return failures, notes, n_gated
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("baseline", type=Path)
+    parser.add_argument("current", type=Path)
+    parser.add_argument("--qps-tolerance", type=float, default=0.15,
+                        help="allowed fractional qps drop (default 0.15)")
+    parser.add_argument("--no-normalize", action="store_true",
+                        help="gate absolute qps directly, without the "
+                             "median machine-speed normalization")
+    args = parser.parse_args(argv)
+
+    baseline = json.loads(args.baseline.read_text())
+    current = json.loads(args.current.read_text())
+    failures, notes, n_gated = compare(baseline, current, args.qps_tolerance,
+                                       normalize=not args.no_normalize)
+
+    for line in notes:
+        print(f"  {line}")
+    if failures:
+        print(f"\nPERF GATE FAILED ({len(failures)} regressions):")
+        for line in failures:
+            print(f"  FAIL {line}")
+        return 1
+    print(f"\nperf gate ok: {n_gated} rows gated, 0 regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,17 +4,27 @@ Prints ``name,us_per_call,derived`` CSV rows.  The roofline table (deliverable
 g) is produced by ``python -m benchmarks.roofline`` (it compiles dry-run
 variants and needs the 512-device environment); this driver appends a summary
 of its artifact when present.
+
+CI perf-regression mode (ISSUE 5)::
+
+    python -m benchmarks.run --fast --json BENCH_PR.json
+
+runs the fast gate subset — probe + relalg microbenches, batched and sharded
+query throughput, and the shard-local parallel-mode bench — and writes the
+rows as JSON, keyed by row name.  ``benchmarks/compare.py`` diffs that file
+against the checked-in ``BENCH_BASELINE.json`` and fails CI on a >15% qps
+regression or any post-warmup recompile-count increase.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 import time
 from pathlib import Path
 
 
-def main() -> None:
-    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+def _benches(fast: bool):
     from benchmarks import (
         bench_adaptivity,
         bench_balance,
@@ -26,9 +36,17 @@ def main() -> None:
         bench_startup,
     )
 
-    t0 = time.perf_counter()
-    rows: list[tuple[str, float, str]] = []
-    for bench in (
+    if fast:
+        # the CI gate subset: every row that carries a protected metric
+        # (qps, speedup, recompile counts) and finishes in minutes
+        return (
+            bench_probe.run,
+            bench_relalg.run,
+            bench_queries.run_batched,
+            bench_queries.run_sharded,
+            bench_adaptivity.run_parallel_mode_sharded,
+        )
+    return (
         bench_partition.run,
         bench_startup.run,
         bench_probe.run,
@@ -38,18 +56,48 @@ def main() -> None:
         bench_queries.run_sharded,  # mesh substrate vs single device (JSON
         #                             artifact: artifacts/sharded_queries.json)
         bench_adaptivity.run,
+        bench_adaptivity.run_parallel_mode_sharded,  # shard-local PI hits
+        #                     vs all_to_all (artifacts/parallel_mode_sharded)
         bench_heuristics.run,
         bench_balance.run,
-    ):
+    )
+
+
+def main(argv: list[str] | None = None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--fast", action="store_true",
+                        help="CI gate subset only (minutes, not tens)")
+    parser.add_argument("--json", metavar="PATH", default=None,
+                        help="also write rows as JSON keyed by name "
+                             "(the compare.py input format)")
+    args = parser.parse_args(argv)
+
+    # self-sufficient imports: the repo root (benchmarks package) and src/
+    # (the repro package) — CI runs this entry point with no PYTHONPATH
+    root = Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(root / "src"))
+    sys.path.insert(0, str(root))
+    t0 = time.perf_counter()
+    rows: list[tuple[str, float, str]] = []
+    for bench in _benches(args.fast):
         rows.extend(bench())
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
 
+    if args.json:
+        payload = {
+            name: {"value": float(value), "derived": derived}
+            for name, value, derived in rows
+        }
+        Path(args.json).write_text(json.dumps(payload, indent=2,
+                                              sort_keys=True) + "\n")
+        print(f"# wrote {len(payload)} rows to {args.json}")
+
     # ---- roofline summary (from the dry-run artifacts, if present)
     rf = Path("artifacts/roofline.json")
-    if rf.exists():
+    if not args.fast and rf.exists():
         data = [r for r in json.loads(rf.read_text()) if r.get("ok")]
         for r in data:
             print(

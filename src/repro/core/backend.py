@@ -235,6 +235,13 @@ def probe_compile_cache_size() -> int:
     from . import substrate as _substrate
 
     fns += list(_substrate.SHARDED_STAGE_FNS)
+    # IRD's fused replica-indexing dispatch (created lazily on first
+    # redistribution) — repeated redistributions of same-shape patterns
+    # must reuse its cache like any other stage
+    from . import ird as _ird
+
+    if _ird._INDEX_ROWS_JIT is not None:
+        fns.append(_ird._INDEX_ROWS_JIT)
     # _cache_size is a private jit API with no stability guarantee; degrade
     # to 0 (metric unavailable) rather than crash on a jax version bump
     return sum(getattr(f, "_cache_size", lambda: 0)() for f in fns)

@@ -177,5 +177,27 @@ class WorkloadBatcher:
     def buckets(self) -> list[Bucket]:
         return list(self._buckets.values())
 
+    def pop_bucket(self, min_size: int = 2) -> Bucket | None:
+        """Remove and return the oldest bucket holding at least ``min_size``
+        queries (FIFO over bucket creation), or None.
+
+        Used by the engine's overlapped-IRD path to evaluate an
+        already-decided bucket while redistribution collectives are in
+        flight.  The popped bucket is *closed*: a later query with the same
+        shape opens a fresh bucket.  That can split what a strict two-pass
+        run would have batched together — changing dispatch counts, never
+        results (bucket members only read the immutable main index, and
+        per-query stats are computed per batch lane).  Singleton buckets are
+        deliberately skipped: they would execute sequentially anyway (no
+        batched dispatch to hide in the collective shadow), and popping them
+        splits the steady-state bucket grouping — the batch shapes an
+        IRD-free rerun of the same workload would dispatch — which would
+        cost first-time compilations *after* adaptation has settled, exactly
+        when the workload is supposed to be recompile-free."""
+        for plan, bucket in self._buckets.items():
+            if len(bucket) >= min_size:
+                return self._buckets.pop(plan)
+        return None
+
     def __len__(self) -> int:
         return len(self._buckets)

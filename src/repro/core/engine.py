@@ -238,12 +238,25 @@ class AdHashEngine:
            buckets fall back to the sequential executor and its warm jit
            cache), then the workload report is filled in query order.
 
+        *Overlapped IRD*: when the control pass triggers a redistribution,
+        the IRD exchanges are dispatched asynchronously
+        (``redistribute_deferred``) and the oldest ready shape bucket is
+        evaluated while those collectives are in flight; the barrier
+        (``PendingRedistribution.finalize``) runs before the pattern index
+        publishes the new entries, so routing decisions for later queries —
+        and hence the whole adaptivity state machine — are identical to the
+        sequential order.  Overlap only changes *when* already-decided
+        buckets execute (they read nothing but the immutable main index),
+        never what any query computes.
+
         Error semantics differ from the sequential loop: if a query is
         genuinely unexecutable (retry budget exhausted even sequentially)
         the same ``ExecutorError`` propagates, but the adaptivity control
         pass has by then processed the *whole* workload — equivalent to the
         failing query having been last — and no partial results or report
-        entries are recorded.
+        entries are recorded.  That holds on the overlapped path too: an
+        error from a bucket evaluated inside an IRD collective window is
+        deferred until the control pass completes, then re-raised.
         """
         # per query: (Relation, QueryStats, wall seconds)
         results: list[tuple | None] = [None] * len(queries)
@@ -251,6 +264,27 @@ class AdHashEngine:
             self.executor.locality_aware, self.executor.pinned_opt
         )
         t_all = time.perf_counter()
+
+        # an overlapped bucket hitting a genuinely unexecutable query must
+        # not abort the control pass mid-workload: the error is deferred and
+        # re-raised once adaptivity has processed every query, preserving
+        # the documented error semantics ("equivalent to the failing query
+        # having been last")
+        deferred_errors: list[ExecutorError] = []
+
+        def overlap():
+            # evaluate the oldest ready multi-query bucket while the IRD
+            # collectives fly; popped buckets are closed — later same-shape
+            # queries open a fresh bucket, which only affects grouping, not
+            # results.  Singletons stay put (see WorkloadBatcher.pop_bucket:
+            # no batched work to overlap, and popping them would perturb the
+            # steady-state batch shapes the warmed jit cache is keyed on).
+            bucket = batcher.pop_bucket()
+            if bucket is not None:
+                try:
+                    self._execute_bucket(bucket, results)
+                except ExecutorError as e:
+                    deferred_errors.append(e)
 
         # ---- pass 1: adaptivity control, replica-mode execution, bucketing
         for i, q in enumerate(queries):
@@ -271,29 +305,17 @@ class AdHashEngine:
                             max(self.capacity, plan.capacity_hint()))
             if self.adaptive:
                 self.heatmap.insert(tree)
-                self._maybe_redistribute()
+                self._maybe_redistribute(overlap=overlap)
 
-        # ---- pass 2: one dispatch per shape bucket
+        # the adaptivity control pass is complete for the whole workload;
+        # now surface any failure an overlapped bucket hit (no results or
+        # report entries are recorded, matching the sequential error path)
+        if deferred_errors:
+            raise deferred_errors[0]
+
+        # ---- pass 2: one dispatch per remaining shape bucket
         for bucket in batcher.buckets():
-            t0 = time.perf_counter()
-            if len(bucket) == 1:
-                rels_stats = [self._run_sequential(bucket, 0)]
-            else:
-                try:
-                    rels, stats_l = self.executor.execute_batch(
-                        bucket.plan, bucket.stacked_consts()
-                    )
-                    self.report.n_batch_dispatches += 1
-                    rels_stats = list(zip(rels, stats_l))
-                except ExecutorError:
-                    # overflow pathologies etc.: per-query sequential fallback
-                    rels_stats = [
-                        self._run_sequential(bucket, j)
-                        for j in range(len(bucket))
-                    ]
-            dt = (time.perf_counter() - t0) / max(len(bucket), 1)
-            for tag, (rel, qstats) in zip(bucket.tags, rels_stats):
-                results[tag] = (rel, qstats, dt)
+            self._execute_bucket(bucket, results)
 
         # ---- workload report, in original query order
         out: list[tuple[Relation, QueryStats]] = []
@@ -313,6 +335,28 @@ class AdHashEngine:
         self.report.wall_time_s += time.perf_counter() - t_all
         return out
 
+    def _execute_bucket(self, bucket, results: list) -> None:
+        """Evaluate one shape bucket and fill its members' result slots."""
+        t0 = time.perf_counter()
+        if len(bucket) == 1:
+            rels_stats = [self._run_sequential(bucket, 0)]
+        else:
+            try:
+                rels, stats_l = self.executor.execute_batch(
+                    bucket.plan, bucket.stacked_consts()
+                )
+                self.report.n_batch_dispatches += 1
+                rels_stats = list(zip(rels, stats_l))
+            except ExecutorError:
+                # overflow pathologies etc.: per-query sequential fallback
+                rels_stats = [
+                    self._run_sequential(bucket, j)
+                    for j in range(len(bucket))
+                ]
+        dt = (time.perf_counter() - t0) / max(len(bucket), 1)
+        for tag, (rel, qstats) in zip(bucket.tags, rels_stats):
+            results[tag] = (rel, qstats, dt)
+
     def _run_sequential(self, bucket, j: int) -> tuple[Relation, QueryStats]:
         """Sequential-executor fallback for one bucket member."""
         rel, qstats = self.executor.execute(
@@ -322,25 +366,45 @@ class AdHashEngine:
         return rel, qstats
 
     # ------------------------------------------------------------- adaptivity
-    def _maybe_redistribute(self) -> None:
+    def _maybe_redistribute(self, overlap=None) -> None:
+        """Trigger IRD for newly hot patterns.
+
+        ``overlap``, when given, is a zero-argument callable run *between*
+        dispatching a redistribution and its barrier: the IRD exchange
+        collectives are in flight while it executes (``query_batch`` passes
+        a callback that evaluates the next ready shape bucket).  The barrier
+        (``PendingRedistribution.finalize``) always precedes the pattern-
+        index publication, so the adaptivity state machine is sequential-
+        equivalent whether or not anything was overlapped."""
         for hot in self.heatmap.hot_patterns(self.threshold):
             key = tuple(sorted(map(tuple, hot.edge_paths)))
             if key in self._no_redistribute:
                 continue
             if self.pattern_index.match(hot.rtree) is not None:
                 continue  # already redistributed
-            storage, ird_stats = self.ird.redistribute(hot)
-            self.pattern_index.insert(hot.rtree, storage)
-            self.report.n_redistributions += 1
-            self.report.ird_comm_cells += ird_stats.comm_cells
-            self.report.ird_triples += ird_stats.triples_indexed
-            self._enforce_budget()
-            # pattern too large for the budget even alone: do not thrash
-            if (
-                self.budget is not None
-                and self.pattern_index.match(hot.rtree) is None
-            ):
-                self._no_redistribute.add(key)
+            pending = self.ird.redistribute_deferred(hot)
+            try:
+                if overlap is not None:
+                    overlap()  # IRD collectives overlap this evaluation
+            finally:
+                # the dispatched redistribution is completed and published
+                # even if the overlapped bucket raised (ExecutorError on a
+                # pathological member): its replica modules are already
+                # registered in the ReplicaIndex, and skipping the publish
+                # would orphan them — unevictable, silently inflating the
+                # budget accounting forever
+                storage, ird_stats = pending.finalize()  # barrier first
+                self.pattern_index.insert(hot.rtree, storage)
+                self.report.n_redistributions += 1
+                self.report.ird_comm_cells += ird_stats.comm_cells
+                self.report.ird_triples += ird_stats.triples_indexed
+                self._enforce_budget()
+                # pattern too large for the budget even alone: don't thrash
+                if (
+                    self.budget is not None
+                    and self.pattern_index.match(hot.rtree) is None
+                ):
+                    self._no_redistribute.add(key)
 
     def _enforce_budget(self) -> None:
         if self.budget is None:

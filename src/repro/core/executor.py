@@ -43,6 +43,10 @@ class QueryStats:
     n_local_joins: int = 0
     n_retries: int = 0
     plan: list[str] = field(default_factory=list)
+    # which substrate route executed the query: "" for the distributed
+    # shard_map wrappers, "<substrate>-local" when a PI hit took the
+    # shard-local route (zero collectives in the lowered stages)
+    route: str = ""
 
     @property
     def comm_bytes(self) -> int:

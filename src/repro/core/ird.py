@@ -22,14 +22,34 @@ normal index machinery (and eviction) applies — paper §5.5.
 The DSJ stages run through the execution substrate, so under a mesh
 substrate IRD's own exchanges lower to the same collectives as query
 evaluation; freshly built replica modules are re-placed on the substrate
-(``shard_store``) before they serve parallel-mode queries.  The remaining
-host-driven glue (the phase-1 triple re-hash, ``from_device_rows``) runs
-eagerly — it is the bootstrap path, executed once per redistribution.
+(``shard_store``) before they serve parallel-mode queries.
+
+**Overlapped (deferred) mode.**  ``redistribute_deferred`` dispatches the
+same phase-1/phase-2 work but does not wait for it: JAX async dispatch means
+every exchange collective and the replica-module indexing sort are merely
+*enqueued* when the call returns, and the host is free to evaluate the next
+shape bucket of the query stream while they execute.  The returned
+:class:`PendingRedistribution` keeps the device-derived accounting
+(wire-cell counts, indexed-triple counts) as unconverted device scalars —
+converting them early would force the very sync the mode exists to avoid —
+and ``finalize()`` is the barrier: it blocks until every freshly built
+replica buffer is materialized, then folds the counters into
+:class:`IRDStats`.  The engine finalizes *before* publishing the pattern
+index, so adaptivity state stays sequential-equivalent: a query can only be
+routed to a replica module that is already consistent.  The replica indexing
+itself is one fused jitted dispatch whose staging buffers are donated on
+platforms with buffer donation (TPU/GPU), letting XLA reuse the exchange
+staging memory for the sorted indexes.
+
+The only remaining synchronous points are the overflow-retry capacity
+checks (host control flow by design) — the expensive tail (final exchanges,
+sort-indexing, accounting reductions) all lands behind the barrier.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+import jax
 import jax.numpy as jnp
 
 from . import dsj
@@ -40,9 +60,33 @@ from .query import O, S, TriplePattern, Var
 from .transform import RTree, TreeEdge, TreeNode
 from .triples import ShardedTripleStore
 
-__all__ = ["IRDStats", "IncrementalRedistributor"]
+__all__ = ["IRDStats", "IncrementalRedistributor", "PendingRedistribution"]
 
 _MAX_RETRIES = 7
+
+
+# --------------------------------------------------------- replica indexing
+# One fused dispatch for the sort-indexing of a freshly exchanged replica
+# module (ShardedTripleStore.from_device_rows traced under jit), so the
+# whole build is enqueued asynchronously behind the exchange collectives.
+# On TPU/GPU the (rows, valid) staging buffers are donated — they are dead
+# after this call, and donation lets XLA write the sorted indexes into the
+# staging memory instead of allocating fresh buffers.  CPU has no buffer
+# donation, so donating there would only emit warnings.
+_INDEX_ROWS_JIT = None
+
+
+def _index_replica_rows(rows: jax.Array, valid: jax.Array, n_ids: int
+                        ) -> ShardedTripleStore:
+    global _INDEX_ROWS_JIT
+    if _INDEX_ROWS_JIT is None:
+        donate = (0, 1) if jax.default_backend() in ("tpu", "gpu") else ()
+        _INDEX_ROWS_JIT = jax.jit(
+            ShardedTripleStore.from_device_rows,
+            static_argnames=("n_ids",),
+            donate_argnums=donate,
+        )
+    return _INDEX_ROWS_JIT(rows, valid, n_ids=n_ids)
 
 
 @dataclass
@@ -54,6 +98,38 @@ class IRDStats:
     @property
     def comm_bytes(self) -> int:
         return self.comm_cells * 4
+
+
+@dataclass
+class PendingRedistribution:
+    """A dispatched-but-not-yet-published redistribution.
+
+    Device work (exchange collectives, replica sort-indexing) is enqueued;
+    the replica modules are already registered in the ReplicaIndex but the
+    pattern index must not reference them until :meth:`finalize` has run.
+    ``finalize`` is the overlap barrier: it blocks until every staged buffer
+    is materialized, then folds the deferred device counters into the stats
+    — so the (storage, stats) it returns are bit-identical to what the
+    synchronous path would have produced."""
+
+    storage: dict[int, str | None] = field(default_factory=dict)
+    stats: IRDStats = field(default_factory=IRDStats)
+    # device scalars, converted only at the barrier (int() would sync early)
+    _cells: list = field(default_factory=list)
+    _triples: list = field(default_factory=list)
+    _barrier: list = field(default_factory=list)  # arrays to block on
+    _done: bool = False
+
+    def finalize(self) -> tuple[dict[int, str | None], IRDStats]:
+        if not self._done:
+            jax.block_until_ready(self._barrier)
+            self.stats.comm_cells += sum(int(c) for c in self._cells)
+            self.stats.triples_indexed += sum(int(t) for t in self._triples)
+            self._cells.clear()
+            self._triples.clear()
+            self._barrier.clear()
+            self._done = True
+        return self.storage, self.stats
 
 
 class IncrementalRedistributor:
@@ -78,11 +154,23 @@ class IncrementalRedistributor:
 
     # ------------------------------------------------------------- top level
     def redistribute(self, hot: HotPattern) -> tuple[dict[int, str | None], IRDStats]:
-        """Algorithm 3 over every root-to-leaf path (DFS).  Returns
-        pattern_idx -> storage id (None = served by main index) + stats."""
-        stats = IRDStats()
+        """Algorithm 3, synchronous: dispatch and immediately barrier.
+        Returns pattern_idx -> storage id (None = served by main index) +
+        stats.  ``redistribute(hot)`` == ``redistribute_deferred(hot)
+        .finalize()`` by construction — one code path, two sync points."""
+        return self.redistribute_deferred(hot).finalize()
+
+    def redistribute_deferred(self, hot: HotPattern) -> PendingRedistribution:
+        """Algorithm 3 over every root-to-leaf path (DFS), dispatched
+        asynchronously.  Exchange collectives and replica indexing are
+        enqueued but not waited on; accounting stays on device.  The caller
+        may interleave other device work (e.g. the next shape bucket of the
+        query stream), then must ``finalize()`` the returned handle before
+        publishing the pattern entries it describes."""
+        pending = PendingRedistribution()
+        stats = pending.stats
         tree = hot.rtree
-        storage: dict[int, str | None] = {}
+        storage = pending.storage
         # replica module holding each edge's triples (None = main index)
         store_of_edge: dict[int, ShardedTripleStore | None] = {}
         # the edge that *leads to* each tree node (object identity)
@@ -104,9 +192,9 @@ class IncrementalRedistributor:
                     # indices")
                     storage[idx] = None
                     store_of_edge[id(edge)] = None
-                    stats.triples_indexed += self._count_matches(q)
+                    self._count_matches(q, pending)
                 else:
-                    sid, st = self._hash_distribute_core_edge(q, stats)
+                    sid, st = self._hash_distribute_core_edge(q, pending)
                     storage[idx] = sid
                     store_of_edge[id(edge)] = st
             else:
@@ -116,14 +204,17 @@ class IncrementalRedistributor:
                 # propagating column of the parent edge = its child side
                 prop_col = O if pedge.parent_is_subject else S
                 sid, st = self._collocate_edge(
-                    q, edge, pq, pstore, prop_col, stats
+                    q, edge, pq, pstore, prop_col, pending
                 )
                 storage[idx] = sid
                 store_of_edge[id(edge)] = st
-        return storage, stats
+        return pending
 
-    def _count_matches(self, q: TriplePattern) -> int:
-        """Main-index matches of a pattern (touched-data accounting)."""
+    def _count_matches(self, q: TriplePattern,
+                       pending: PendingRedistribution) -> None:
+        """Main-index matches of a pattern (touched-data accounting).  The
+        count itself is deferred to the barrier — only the overflow-retry
+        capacity check syncs."""
         spec = dsj.PatternSpec.of(q)
         consts = dsj.pattern_consts(q)
         cap = self.cap
@@ -131,13 +222,13 @@ class IncrementalRedistributor:
             _, valid, total = self.sub.match_rows(self.main, consts, spec, cap,
                                              backend=self.backend)
             if int(total) <= cap:
-                return int(jnp.sum(valid))
+                break
             cap = quantize_capacity(max(cap * 2, int(total)))
-        return int(jnp.sum(valid))
+        pending._triples.append(jnp.sum(valid))
 
     # ----------------------------------------------------------- phase 1
     def _hash_distribute_core_edge(
-        self, q: TriplePattern, stats: IRDStats
+        self, q: TriplePattern, pending: PendingRedistribution
     ) -> tuple[str, ShardedTripleStore]:
         """Hash-distribute triples matching q on the core (object) binding."""
         spec = dsj.PatternSpec.of(q)
@@ -149,8 +240,6 @@ class IncrementalRedistributor:
             if int(total) <= cap:
                 break
             cap = quantize_capacity(max(cap * 2, int(total)))
-        import jax
-
         w = self.w
 
         def per_worker(rows_w, valid_w):
@@ -171,13 +260,23 @@ class IncrementalRedistributor:
         recv = jnp.swapaxes(send, 0, 1).reshape(self.w, -1, 3)
         rvalid = jnp.swapaxes(svalid, 0, 1).reshape(self.w, -1)
         diag = jnp.sum(svalid[jnp.arange(w), jnp.arange(w)])
-        stats.comm_cells += int((jnp.sum(svalid) - diag) * 3)
-        st = ShardedTripleStore.from_device_rows(recv, rvalid, self.main.n_ids)
-        st = self.sub.shard_store(st)
-        stats.triples_indexed += int(jnp.sum(st.counts))
+        pending._cells.append((jnp.sum(svalid) - diag) * 3)
+        st = self._stage_replica(recv, rvalid, pending)
         sid = self.replicas.new_id()
         self.replicas.put(sid, st)
         return sid, st
+
+    def _stage_replica(self, rows: jax.Array, valid: jax.Array,
+                       pending: PendingRedistribution) -> ShardedTripleStore:
+        """Enqueue the sort-indexing + substrate placement of a replica
+        module; the build completes asynchronously behind the exchange
+        collectives, and ``pending`` barriers on its buffers before the PI
+        may publish it."""
+        st = _index_replica_rows(rows, valid, self.main.n_ids)
+        st = self.sub.shard_store(st)
+        pending._triples.append(jnp.sum(st.counts))
+        pending._barrier.extend(st.tree_flatten()[0])
+        return st
 
     # ----------------------------------------------------------- phase 2
     def _collocate_edge(
@@ -187,7 +286,7 @@ class IncrementalRedistributor:
         parent_q: TriplePattern,
         parent_store: ShardedTripleStore | None,
         prop_col: int,
-        stats: IRDStats,
+        pending: PendingRedistribution,
     ) -> tuple[str, ShardedTripleStore]:
         """Collocate triples matching q with their parent-edge triples
         (a DSJ between the parent replica module and the main index)."""
@@ -223,10 +322,10 @@ class IncrementalRedistributor:
                 if int(maxb) <= cap_peer:
                     break
                 cap_peer = quantize_capacity(max(cap_peer * 2, int(maxb)))
-            stats.comm_cells += int(cells)
+            pending._cells.append(cells)
         else:
             recv, rvalid, cells = self.sub.exchange_broadcast(proj, projv)
-            stats.comm_cells += int(cells)
+            pending._cells.append(cells)
 
         spec = dsj.PatternSpec.of(q)
         consts = dsj.pattern_consts(q)
@@ -242,13 +341,11 @@ class IncrementalRedistributor:
                 cap_flat = quantize_capacity(max(cap_flat * 2, int(maxf)))
             if int(maxc) > cap_cand:
                 cap_cand = quantize_capacity(max(cap_cand * 2, int(maxc)))
-        stats.comm_cells += int(cells)
+        pending._cells.append(cells)
 
         flat = cand.reshape(self.w, -1, 3)
         flatv = cvalid.reshape(self.w, -1)
-        st = ShardedTripleStore.from_device_rows(flat, flatv, self.main.n_ids)
-        st = self.sub.shard_store(st)
-        stats.triples_indexed += int(jnp.sum(st.counts))
+        st = self._stage_replica(flat, flatv, pending)
         sid = self.replicas.new_id()
         self.replicas.put(sid, st)
         return sid, st

@@ -225,8 +225,14 @@ class ParallelExecutor:
     Walks the query's redistribution tree in DFS order; every join is a
     local probe against either the main index (edges whose subject is the
     core) or the matched PI edge's replica module.  Zero communication —
-    under a mesh substrate every probe stays inside its shard (no
-    collectives in the lowered stages).
+    and on a mesh substrate that is now literal: the stages dispatch through
+    the substrate's *shard-local route* (``match_first_local`` /
+    ``local_probe_join_local``), whose compiled HLO contains no cross-shard
+    collectives at all — not even the total-pmax the distributed wrappers
+    pay (the host reduces the per-shard overflow totals instead, via
+    ``substrate.host_total``).  A PI hit therefore executes with zero wire
+    cells *and* zero collective launches; ``QueryStats.route`` records which
+    route served the query.
     """
 
     def __init__(
@@ -260,7 +266,8 @@ class ParallelExecutor:
         matches: list[tuple[TreeEdge, PIEdge]],
         capacity: int = 1 << 12,
     ) -> tuple[Relation, QueryStats]:
-        stats = QueryStats(mode="parallel-replica")
+        stats = QueryStats(mode="parallel-replica",
+                           route=f"{self.sub.name}-local")
         capacity = quantize_capacity(capacity)
         pie_of = {id(qe): pie for qe, pie in matches}
         query = tree.query
@@ -296,34 +303,43 @@ class ParallelExecutor:
         return rel, stats
 
     # ------------------------------------------------------------- internals
+    # Both stages go through the substrate's shard-local route: on a mesh
+    # the wrappers skip even the total-pmax, returning per-shard maxima the
+    # host reduces here (host_total) while deciding the overflow retry.
     def _first(self, store, q, spec, consts, cap, stats) -> Relation:
+        from .substrate import host_total
+
         for _ in range(_MAX_RETRIES):
-            cols, valid, total = self.sub.match_first(store, consts, spec,
-                                                      cap,
-                                                      backend=self.backend)
-            if int(total) <= cap:
+            cols, valid, total = self.sub.match_first_local(
+                store, consts, spec, cap, backend=self.backend
+            )
+            total = host_total(total)
+            if total <= cap:
                 keep, vars_ = q.distinct_var_cols()
                 if len(keep) != len(q.var_cols()):
                     cols = cols[..., list(keep)]
                 return Relation(cols, valid, vars_)
-            cap = quantize_capacity(max(cap * 2, int(total)))
+            cap = quantize_capacity(max(cap * 2, total))
             stats.n_retries += 1
         raise ExecutorError("parallel first match exceeded retries")
 
     def _local_join(
         self, store, rel, q, spec, consts, join_var, probe_col, cap, stats
     ) -> Relation:
+        from .substrate import host_total
+
         c1 = rel.col_of(join_var)
         checks = _shared_checks(rel.vars, q, join_var)
         append_cols, out_vars = _append_plan(rel.vars, q)
         for _ in range(_MAX_RETRIES):
-            cols, valid, total = self.sub.local_probe_join(
+            cols, valid, total = self.sub.local_probe_join_local(
                 store, rel.cols, rel.valid, consts, spec, c1, probe_col,
                 checks, append_cols, cap, backend=self.backend,
             )
-            if int(total) <= cap:
+            total = host_total(total)
+            if total <= cap:
                 return Relation(cols, valid, out_vars)
-            cap = quantize_capacity(max(cap * 2, int(total)))
+            cap = quantize_capacity(max(cap * 2, total))
             stats.n_retries += 1
         raise ExecutorError("parallel local join exceeded retries")
 

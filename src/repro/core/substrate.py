@@ -28,15 +28,31 @@ and how the stage-internal worker exchanges are realized:
     ``P(None, 'data')``): one collective launch is amortized over the whole
     shape bucket — B queries share one all_to_all instead of issuing B.
 
+    **Shard-local route** (the dual of the collectives above): the two
+    stages parallel mode is made of — ``match_first`` and
+    ``local_probe_join`` — have second wrappers with *no* cross-shard
+    reductions at all.  The regular mesh wrappers ``pmax`` the per-shard
+    overflow totals back to a replicated scalar, which lowers to an
+    all-reduce; a PI-hit query provably needs no communication (the paper's
+    parallel mode — IRD already collocated every replica module), so paying
+    even that reduction is pure overhead.  The ``*_local`` wrappers instead
+    return the per-shard totals as a ``P('data')``-sharded ``(D,)`` vector
+    and let the host take the max while deciding the overflow retry — a sync
+    it performs anyway.  Their compiled HLO contains **zero** collectives
+    (asserted in tests/test_substrate_mesh.py, the mirror image of the
+    all_to_all/all_gather assertions).
+
 Sharding layout (PartitionSpecs) for the stage operands:
 
     store leaves   (W, capT, …)        P('data')      one shard block/device
     relations      (W, cap, k)         P('data')
     projections    (W, cap_proj)       P('data')
     recv/cand      (W, W_peer, cap, …) P('data')      peer axis replicated
+    replica module (W, capR, …)        P('data')      placed by shard_store
     batched forms  (B, W, …)           P(None, 'data')
     pattern consts (3,) / (B, 3)       P()            replicated
     totals/cells   scalars / (B,)      P()            pmax/psum-replicated
+    local totals   (D,)                P('data')      shard-local route only
 
 All sharded wrappers are module-level ``jit`` functions with the mesh as a
 static argument, so they share one compile cache (counted by
@@ -60,7 +76,8 @@ from .backend import resolve_backend
 from .relation import Relation
 from .triples import ShardedTripleStore, match_ranges
 
-__all__ = ["Substrate", "SingleDeviceSubstrate", "MeshSubstrate", "WORKER_AXIS"]
+__all__ = ["Substrate", "SingleDeviceSubstrate", "MeshSubstrate",
+           "WORKER_AXIS", "host_total"]
 
 WORKER_AXIS = "data"
 
@@ -117,6 +134,23 @@ class Substrate:
     probe_and_reply_batch = staticmethod(dsj.probe_and_reply_batch)
     finalize_join_batch = staticmethod(dsj.finalize_join_batch)
     local_probe_join_batch = staticmethod(dsj.local_probe_join_batch)
+    # Shard-local route (parallel mode over collocated replicas): on one
+    # device "no cross-shard communication" is vacuously true, so the local
+    # stages ARE the regular stages — same functions, same jit cache.  The
+    # overflow total may come back as any (possibly per-shard) array; hosts
+    # reduce it with ``host_total``.
+    match_first_local = staticmethod(dsj.match_first)
+    local_probe_join_local = staticmethod(dsj.local_probe_join)
+
+
+def host_total(total) -> int:
+    """Host-side max of a stage overflow total.
+
+    Regular stages return a replicated scalar (pmax-ed on a mesh); the
+    shard-local stages return the per-shard maxima as a ``(D,)`` vector and
+    skip the on-device reduction — the host takes the max during the
+    overflow-retry check, a sync point it hits regardless."""
+    return int(np.max(np.asarray(total)))
 
 
 class SingleDeviceSubstrate(Substrate):
@@ -229,6 +263,27 @@ class MeshSubstrate(Substrate):
                          join_col_rel, probe_col, shared_checks, append_cols,
                          cap_out, backend="searchsorted"):
         return _local_probe_join_sharded(
+            self.mesh, self.axis, store, rel_cols, rel_valid, consts,
+            spec=spec, join_col_rel=join_col_rel, probe_col=probe_col,
+            shared_checks=shared_checks, append_cols=append_cols,
+            cap_out=cap_out, backend=backend,
+        )
+
+    # ------------------------------------------------- shard-local route
+    # Parallel mode over IRD-collocated replica modules: the same bodies as
+    # the wrappers above, with the pmax total-reductions dropped — the
+    # compiled HLO contains zero cross-shard collectives (the acceptance
+    # assertion of the shard-local route).
+    def match_first_local(self, store, consts, spec, cap_out,
+                          backend="searchsorted"):
+        return _match_first_shardlocal(self.mesh, self.axis, store, consts,
+                                       spec=spec, cap_out=cap_out,
+                                       backend=backend)
+
+    def local_probe_join_local(self, store, rel_cols, rel_valid, consts,
+                               spec, join_col_rel, probe_col, shared_checks,
+                               append_cols, cap_out, backend="searchsorted"):
+        return _local_probe_join_shardlocal(
             self.mesh, self.axis, store, rel_cols, rel_valid, consts,
             spec=spec, join_col_rel=join_col_rel, probe_col=probe_col,
             shared_checks=shared_checks, append_cols=append_cols,
@@ -495,6 +550,46 @@ def _local_probe_join_sharded(mesh, axis, store, rel_cols, rel_valid, consts,
     )
 
 
+# --------------------------------------------- shard-local stage wrappers
+# The parallel-mode stages without their total-pmax: every op in the body
+# is per-worker local, inputs are either P(axis)-sharded or replicated, and
+# the per-shard overflow totals leave as a P(axis)-sharded (D,) vector —
+# nothing forces XLA to emit a collective, and the zero-collective test
+# asserts none appears.  The host reduces the totals during the overflow
+# check (``host_total``), a sync it performs anyway.
+@partial(jax.jit, static_argnames=("mesh", "axis", "spec", "cap_out",
+                                   "backend"))
+def _match_first_shardlocal(mesh, axis, store, consts, spec, cap_out,
+                            backend):
+    def body(store, consts):
+        cols, valid, total = dsj.match_first(store, consts, spec, cap_out,
+                                             backend=backend)
+        return cols, valid, total[None]
+
+    return _wrap(body, mesh, axis, (_pw(axis), _PR),
+                 (_pw(axis), _pw(axis), _pw(axis)))(store, consts)
+
+
+@partial(jax.jit, static_argnames=("mesh", "axis", "spec", "join_col_rel",
+                                   "probe_col", "shared_checks",
+                                   "append_cols", "cap_out", "backend"))
+def _local_probe_join_shardlocal(mesh, axis, store, rel_cols, rel_valid,
+                                 consts, spec, join_col_rel, probe_col,
+                                 shared_checks, append_cols, cap_out,
+                                 backend):
+    def body(store, rel_cols, rel_valid, consts):
+        cols, valid, total = dsj.local_probe_join(
+            store, rel_cols, rel_valid, consts, spec, join_col_rel,
+            probe_col, shared_checks, append_cols, cap_out, backend=backend,
+        )
+        return cols, valid, total[None]
+
+    return _wrap(body, mesh, axis, (_pw(axis), _pw(axis), _pw(axis), _PR),
+                 (_pw(axis), _pw(axis), _pw(axis)))(
+        store, rel_cols, rel_valid, consts
+    )
+
+
 # ------------------------------------------------------- batched variants
 @partial(jax.jit, static_argnames=("mesh", "axis", "spec", "cap_out",
                                    "backend"))
@@ -654,4 +749,6 @@ SHARDED_STAGE_FNS = (
     _probe_and_reply_batch_sharded,
     _finalize_join_batch_sharded,
     _local_probe_join_batch_sharded,
+    _match_first_shardlocal,
+    _local_probe_join_shardlocal,
 )

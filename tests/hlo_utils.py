@@ -1,0 +1,75 @@
+"""Shared compiled-HLO collective-counting assertions.
+
+The substrate tests make claims about what the XLA compiler actually emitted
+for a stage wrapper — "the hash exchange lowers to all-to-all", "the
+shard-local parallel-mode route contains *no* cross-shard collective".  This
+module is the single definition of how those claims are checked, used both
+in-process and inside the 8-forced-device subprocess suites (the subprocess
+PYTHONPATH includes tests/).
+
+Ops are counted on the compiled module text, not the stable-HLO input, so
+what is asserted is what would actually launch on the devices.
+"""
+from __future__ import annotations
+
+import re
+
+# every cross-shard collective XLA can emit for these programs (async
+# variants appear as <op>-start/-done pairs and match the same stems)
+COLLECTIVE_OPS = (
+    "all-to-all",
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "collective-permute",
+    "collective-broadcast",
+)
+
+
+def count_collectives(hlo_text: str) -> dict[str, int]:
+    """Occurrence count per collective op family in compiled-HLO text.
+
+    Matches op uses (``= all-to-all(``, ``= all-gather-start(``...), not
+    arbitrary substrings, so metadata/comment lines cannot inflate counts.
+    """
+    counts: dict[str, int] = {}
+    for op in COLLECTIVE_OPS:
+        # an op *use* is "<type> all-to-all(operands…)": whitespace, the op
+        # name, then the operand list.  Instruction-name references
+        # ("%all-to-all.5") and op_name metadata ("…/all_to_all") don't
+        # match.
+        n = len(re.findall(rf"\s{op}(?:-start|-done)?\(", hlo_text))
+        if n:
+            counts[op] = n
+    return counts
+
+
+def assert_collectives(
+    hlo_text: str,
+    required: tuple[str, ...] = (),
+    forbidden: tuple[str, ...] = (),
+    label: str = "stage",
+) -> dict[str, int]:
+    """Assert which collectives a compiled stage contains.
+
+    ``required``: each op must appear at least once (e.g. ``("all-to-all",)``
+    for the hash exchange).  ``forbidden``: each op must not appear at all.
+    Returns the full count dict for further assertions/reporting.
+    """
+    counts = count_collectives(hlo_text)
+    for op in required:
+        assert counts.get(op, 0) > 0, (
+            f"{label}: expected {op} in compiled HLO, found collectives "
+            f"{counts or '{}'}"
+        )
+    for op in forbidden:
+        assert counts.get(op, 0) == 0, (
+            f"{label}: forbidden {op} appeared {counts[op]}x in compiled HLO"
+        )
+    return counts
+
+
+def assert_no_collectives(hlo_text: str, label: str = "stage") -> None:
+    """The shard-local acceptance assertion: zero cross-shard collectives of
+    any kind in the compiled module."""
+    assert_collectives(hlo_text, forbidden=COLLECTIVE_OPS, label=label)

@@ -4,8 +4,18 @@
 backstop) and the ``_no_redistribute`` anti-thrash set were previously only
 exercised end-to-end through test_engine_adaptive.py; these tests drive them
 in isolation with controlled pattern-index / replica-index state.
+
+The eviction-under-mesh tests (ISSUE 5 satellite) additionally pin down
+that budget enforcement against ``shard_store``-re-placed replica modules
+is indistinguishable from the single-device path — same PI fingerprints,
+LRU decisions and per-worker replica footprints — and that dropping an
+evicted module really releases its device buffers (the 8-device variant
+lives in tests/test_substrate_mesh.py).
 """
 from __future__ import annotations
+
+import gc
+import weakref
 
 import numpy as np
 import pytest
@@ -15,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.core.engine import AdHashEngine
 from repro.core.query import Const, Query, TriplePattern, Var
+from repro.core.substrate import MeshSubstrate
 from repro.core.transform import build_redistribution_tree
 from repro.core.triples import ShardedTripleStore
 
@@ -159,3 +170,86 @@ def test_no_redistribute_not_marked_when_budget_fits():
     assert eng.report.n_redistributions >= 1
     assert eng._no_redistribute == set()
     assert eng.report.n_evictions == 0
+
+
+# ----------------------------------------------------- eviction under mesh
+def _mesh_engine(budget=None, threshold=2, w=2):
+    d, triples = load_example()
+    eng = AdHashEngine(triples, w, adaptive=True,
+                       frequency_threshold=threshold,
+                       replication_budget=budget, capacity=256,
+                       substrate=MeshSubstrate())
+    return d, eng
+
+
+def test_eviction_under_mesh_replays_single_device_state():
+    """A budgeted workload whose IRD replicas are shard_store-re-placed on
+    the mesh evicts exactly like the single-device engine: bit-identical
+    PI fingerprints (incl. LRU timestamps), eviction/redistribution counts
+    and per-worker replica footprints."""
+    d, single = _engine(budget=0, threshold=2)
+    _, mesh = _mesh_engine(budget=0, threshold=2)
+    q = prof_query(d)
+    r_single = [(rel.to_set(), st.comm_cells, st.mode)
+                for rel, st in (single.query(q) for _ in range(6))]
+    r_mesh = [(rel.to_set(), st.comm_cells, st.mode)
+              for rel, st in (mesh.query(q) for _ in range(6))]
+    assert r_single == r_mesh
+    assert single.report.n_evictions == mesh.report.n_evictions >= 1
+    assert single.report.n_redistributions == mesh.report.n_redistributions
+    assert single.report.ird_comm_cells == mesh.report.ird_comm_cells
+    assert single._no_redistribute == mesh._no_redistribute
+    assert single.pattern_index.fingerprint() == \
+        mesh.pattern_index.fingerprint()
+    np.testing.assert_array_equal(
+        single.replicas.per_worker_triples(),
+        mesh.replicas.per_worker_triples(),
+    )
+
+
+def test_eviction_under_mesh_releases_device_buffers():
+    """Evicting a PI subtree drops its replica module from the ReplicaIndex
+    and, once the engine holds no other reference, the module's (mesh-
+    placed) device buffers are garbage — no leak of sharded storage."""
+    d, eng = _mesh_engine(budget=10_000, threshold=2)
+    q = prof_query(d)
+    for _ in range(3):
+        eng.query(q)
+    assert eng.replicas.modules, "workload produced no replica modules"
+    sid, st = next(iter(eng.replicas.modules.items()))
+    refs = [weakref.ref(x) for x in st.tree_flatten()[0]]
+    while eng.pattern_index.evict_lru_root() is not None:
+        pass
+    for s in list(eng.replicas.modules):
+        eng.replicas.drop(s)
+    del st
+    gc.collect()
+    assert all(r() is None for r in refs), \
+        "evicted replica module still holds device buffers"
+    # the engine keeps answering (distributed mode) after full eviction
+    rel, stats = eng.query(q)
+    assert stats.mode != "parallel-replica"
+    got = set(map(tuple, rel.project_to([Var("prof"), Var("stud")])))
+    assert got == expected_fig2(d)
+
+
+def test_eviction_under_mesh_budget_refills():
+    """After eviction, re-heating the same pattern under the mesh triggers
+    a fresh IRD whose new replica modules serve PI hits again — the
+    adapt -> evict -> re-adapt cycle is closed on the mesh substrate."""
+    d, eng = _mesh_engine(budget=10_000, threshold=2)
+    q = prof_query(d)
+    for _ in range(3):
+        eng.query(q)
+    first = eng.report.n_redistributions
+    assert first >= 1
+    while eng.pattern_index.evict_lru_root() is not None:
+        eng.report.n_evictions += 1
+    # heat map is still hot; the next queries re-redistribute and then hit
+    results = [eng.query(q) for _ in range(3)]
+    assert eng.report.n_redistributions > first
+    assert results[-1][1].mode == "parallel-replica"
+    assert results[-1][1].route == "mesh-local"
+    got = set(map(tuple,
+                  results[-1][0].project_to([Var("prof"), Var("stud")])))
+    assert got == expected_fig2(d)

@@ -1,4 +1,4 @@
-"""Execution-substrate tests (ISSUE 4 tentpole).
+"""Execution-substrate tests (ISSUE 4 tentpole + ISSUE 5 shard-local route).
 
 In-process part: substrate API + single/mesh parity on whatever devices the
 tier-1 host has (one CPU device: the mesh degenerates to one shard, the
@@ -11,11 +11,22 @@ pattern): a forced 8-device CPU host asserts the paper-level claims —
     route contains **all-to-all**, and of ``exchange_broadcast``
     **all-gather**, under the 8-device mesh (Observation 1, lowered for
     real);
+  * the *shard-local* parallel-mode route (``match_first_local`` /
+    ``local_probe_join_local``) compiles to HLO with **zero** cross-shard
+    collectives of any kind — while the distributed wrappers of the same
+    stages carry the total-pmax all-reduce (the dual assertion: adapt, then
+    stop communicating);
   * sharded query results, modes and per-query ``QueryStats`` comm cells
     are bit-identical to the single-device path, sequentially and through
-    ``query_batch`` — including a mid-batch-adaptivity case;
+    ``query_batch`` — including a mid-batch-adaptivity case (which now
+    exercises overlapped IRD: deferred dispatch + bucket evaluation in the
+    collective shadow + barrier-before-publish);
   * a warmed sharded workload triggers zero new jit compilations;
+  * LRU eviction under a replication budget replays bit-identical PI
+    fingerprints / per-worker replica footprints vs single-device;
   * worker counts that do not divide the mesh are rejected.
+
+The HLO assertions go through the shared ``tests/hlo_utils.py`` helper.
 """
 from __future__ import annotations
 
@@ -144,9 +155,10 @@ def _run_sub(code: str, timeout: int = 540) -> str:
     res = subprocess.run(
         [sys.executable, "-c", code],
         capture_output=True, text=True, timeout=timeout,
+        # tests/ is on the path too so the child can import hlo_utils
         env={**os.environ,
-             "PYTHONPATH": "src" + os.pathsep + os.environ.get(
-                 "PYTHONPATH", "")},
+             "PYTHONPATH": os.pathsep.join(
+                 ["src", "tests", os.environ.get("PYTHONPATH", "")])},
         cwd=str(Path(__file__).resolve().parent.parent),
     )
     assert res.returncode == 0, res.stderr[-4000:]
@@ -176,6 +188,7 @@ def test_mesh8_hlo_contains_collectives():
     broadcast exchange all-gather (single-query *and* batched stages)."""
     code = _PRELUDE + textwrap.dedent(
         """
+        from hlo_utils import assert_collectives
         from repro.core.dsj import PatternSpec
         from repro.core.triples import ShardedTripleStore
 
@@ -189,9 +202,11 @@ def test_mesh8_hlo_contains_collectives():
 
         txt = hlo(sb._exchange_hash_sharded, proj, pv, cap_peer=64,
                   backend="searchsorted")
-        assert "all-to-all" in txt, "exchange_hash did not lower to all_to_all"
+        assert_collectives(txt, required=("all-to-all",),
+                           label="exchange_hash")
         txt = hlo(sb._exchange_broadcast_sharded, proj, pv)
-        assert "all-gather" in txt, "exchange_broadcast did not lower to all_gather"
+        assert_collectives(txt, required=("all-gather",),
+                           label="exchange_broadcast")
 
         # reply route: probe_and_reply ships candidates back to their senders
         store = ShardedTripleStore.empty(8, 32, n_ids=100)
@@ -203,20 +218,90 @@ def test_mesh8_hlo_contains_collectives():
         txt = hlo(sb._probe_and_reply_sharded, store, recv, rv, consts,
                   spec=spec, probe_col=0, cap_flat=64, cap_cand=64,
                   backend="searchsorted")
-        assert "all-to-all" in txt, "reply route did not lower to all_to_all"
+        assert_collectives(txt, required=("all-to-all",),
+                           label="probe_and_reply")
 
         # batched stages: B rides along replicated, one collective per bucket
         bproj = jnp.zeros((4, 8, 64), jnp.int32)
         bpv = jnp.zeros((4, 8, 64), bool)
         txt = hlo(sb._exchange_hash_batch_sharded, bproj, bpv, cap_peer=64,
                   backend="searchsorted")
-        assert "all-to-all" in txt
+        assert_collectives(txt, required=("all-to-all",),
+                           label="exchange_hash_batch")
         txt = hlo(sb._exchange_broadcast_batch_sharded, bproj, bpv)
-        assert "all-gather" in txt
+        assert_collectives(txt, required=("all-gather",),
+                           label="exchange_broadcast_batch")
         print("HLO-OK")
         """
     )
     assert "HLO-OK" in _run_sub(code)
+
+
+@pytest.mark.slow
+def test_mesh8_shard_local_route_zero_collectives():
+    """ISSUE 5 acceptance: the shard-local parallel-mode wrappers compile to
+    HLO with no cross-shard collective of any kind under the 8-device mesh,
+    while the distributed wrappers of the same stages carry the total-pmax
+    all-reduce — the collective the shard-local route exists to drop."""
+    code = _PRELUDE + textwrap.dedent(
+        """
+        from hlo_utils import assert_collectives, assert_no_collectives
+        from repro.core.dsj import PatternSpec
+        from repro.core.triples import ShardedTripleStore
+
+        sub = sb.MeshSubstrate()
+        store = ShardedTripleStore.empty(8, 32, n_ids=100)
+        spec = PatternSpec(s_const=False, p_const=True, o_const=False,
+                           same_var_so=False, var_cols=(0, 2))
+        consts = jnp.asarray([-1, 1, -1], jnp.int32)
+        rel = jnp.zeros((8, 64, 2), jnp.int32)
+        rv = jnp.zeros((8, 64), bool)
+
+        def hlo(fn, *a, **kw):
+            return fn.lower(sub.mesh, sub.axis, *a, **kw).compile().as_text()
+
+        # the parallel-mode stages, shard-local: zero collectives
+        txt = hlo(sb._match_first_shardlocal, store, consts, spec=spec,
+                  cap_out=64, backend="searchsorted")
+        assert_no_collectives(txt, label="match_first_local")
+        txt = hlo(sb._local_probe_join_shardlocal, store, rel, rv, consts,
+                  spec=spec, join_col_rel=0, probe_col=0, shared_checks=(),
+                  append_cols=(2,), cap_out=64, backend="searchsorted")
+        assert_no_collectives(txt, label="local_probe_join_local")
+
+        # the dual: the distributed wrappers of the *same* stages pay an
+        # all-reduce (the pmax of the per-shard overflow totals)
+        txt = hlo(sb._match_first_sharded, store, consts, spec=spec,
+                  cap_out=64, backend="searchsorted")
+        assert_collectives(txt, required=("all-reduce",),
+                           label="match_first (distributed)")
+        txt = hlo(sb._local_probe_join_sharded, store, rel, rv, consts,
+                  spec=spec, join_col_rel=0, probe_col=0, shared_checks=(),
+                  append_cols=(2,), cap_out=64, backend="searchsorted")
+        assert_collectives(txt, required=("all-reduce",),
+                           label="local_probe_join (distributed)")
+
+        # end to end: a PI-hit query on a live mesh engine runs zero-comm
+        # through the shard-local route
+        from repro.core.query import Const, Query, TriplePattern, Var
+
+        d, triples = lubm_like(n_universities=2, depts_per_univ=2,
+                               profs_per_dept=2, students_per_prof=2)
+        eng = AdHashEngine(triples, 8, substrate=sb.MeshSubstrate(),
+                           adaptive=True, frequency_threshold=2,
+                           capacity=256)
+        adv = d.lookup("ub:advisor")
+        q = Query([TriplePattern(Var("x"), Const(adv), Var("y"))],
+                  name="hotq")
+        for _ in range(3):
+            rel_, st = eng.query(q)
+        assert st.mode == "parallel-replica", st.mode
+        assert st.route == "mesh-local", st.route
+        assert st.comm_cells == 0
+        print("SHARD-LOCAL-OK")
+        """
+    )
+    assert "SHARD-LOCAL-OK" in _run_sub(code)
 
 
 @pytest.mark.slow
@@ -291,3 +376,57 @@ def test_mesh8_parity_recompiles_and_validation():
         """
     )
     assert "PARITY-OK" in _run_sub(code)
+
+
+@pytest.mark.slow
+def test_mesh8_eviction_parity_and_buffer_release():
+    """Eviction under the mesh (ISSUE 5 satellite): a budgeted workload that
+    triggers LRU eviction of shard_store-re-placed replica modules replays
+    bit-identical PI fingerprints, eviction counts and per-worker replica
+    footprints vs the single-device engine — and dropping a module actually
+    releases its device buffers."""
+    code = _PRELUDE + textwrap.dedent(
+        """
+        import gc, weakref
+
+        d, triples = lubm_like(n_universities=2, depts_per_univ=2,
+                               profs_per_dept=2, students_per_prof=2)
+        wl = Workload(d, seed=11)
+        # tight budget: later redistributions evict earlier subtrees
+        kw = dict(adaptive=True, frequency_threshold=2, capacity=256,
+                  replication_budget=64)
+        qs = wl.sample(6) * 2
+        single = AdHashEngine(triples, 8, **kw)
+        mesh = AdHashEngine(triples, 8, substrate=sb.MeshSubstrate(), **kw)
+        r_single = [(rel.to_set(), st.comm_cells, st.mode)
+                    for rel, st in (single.query(q) for q in qs)]
+        r_mesh = [(rel.to_set(), st.comm_cells, st.mode)
+                  for rel, st in mesh.query_batch(qs)]
+        assert r_single == r_mesh, "eviction workload parity broke"
+        assert single.report.n_evictions == mesh.report.n_evictions
+        assert single.report.n_redistributions == \\
+            mesh.report.n_redistributions
+        assert single.pattern_index.fingerprint() == \\
+            mesh.pattern_index.fingerprint()
+        np.testing.assert_array_equal(
+            single.replicas.per_worker_triples(),
+            mesh.replicas.per_worker_triples(),
+        )
+
+        # buffer release: weak-ref a live mesh-placed replica module, evict
+        # everything, and the sharded device buffers must be collectable
+        assert mesh.replicas.modules, "workload produced no live replicas"
+        sid, st = next(iter(mesh.replicas.modules.items()))
+        refs = [weakref.ref(x) for x in st.tree_flatten()[0]]
+        while mesh.pattern_index.evict_lru_root() is not None:
+            pass
+        for s in list(mesh.replicas.modules):
+            mesh.replicas.drop(s)
+        del st
+        gc.collect()
+        assert all(r() is None for r in refs), \\
+            "evicted replica module buffers still referenced"
+        print("EVICTION-OK")
+        """
+    )
+    assert "EVICTION-OK" in _run_sub(code)
