@@ -45,6 +45,7 @@ def _benches(fast: bool):
             bench_queries.run_batched,
             bench_queries.run_sharded,
             bench_adaptivity.run_parallel_mode_sharded,
+            bench_balance.run_skew_sharded,  # Zipf skew: hash vs directory
         )
     return (
         bench_partition.run,
@@ -60,6 +61,8 @@ def _benches(fast: bool):
         #                     vs all_to_all (artifacts/parallel_mode_sharded)
         bench_heuristics.run,
         bench_balance.run,
+        bench_balance.run_skew,  # in-process Zipf skew, hash vs directory
+        bench_balance.run_skew_sharded,  # same on the 8-device mesh
     )
 
 

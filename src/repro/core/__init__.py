@@ -3,6 +3,8 @@
 Modules:
   dictionary     string <-> id encoding (master, §3.1)
   partition      subject-hash initial partitioning + alternatives (§3.1, Tab. 2)
+  placement      pluggable subject->shard placement: hash default + directory
+                 exception table for hot-key splitting (DESIGN.md §8)
   stats          per-predicate global statistics + Chauvenet filter (§3.3, §5.1)
   query          SPARQL BGP model
   backend        data-plane backend registry (searchsorted | pallas for

@@ -104,9 +104,11 @@ class WorkloadBatcher:
     they decide the per-step case kind (paper §4.1.3), which is part of the
     bucket key."""
 
-    def __init__(self, locality_aware: bool = True, pinned_opt: bool = True):
+    def __init__(self, locality_aware: bool = True, pinned_opt: bool = True,
+                 local_join_safe: bool = True):
         self.locality_aware = locality_aware
         self.pinned_opt = pinned_opt
+        self.local_join_safe = local_join_safe
         self._buckets: dict[BatchPlan, Bucket] = {}
 
     # ------------------------------------------------------------- compile
@@ -137,7 +139,7 @@ class WorkloadBatcher:
             # key is exactly what the sequential path would execute
             kind, c1, c2, checks, append_cols, out_vars = step_descriptor(
                 rel_vars, qj, jv, pinned, self.locality_aware,
-                self.pinned_opt,
+                self.pinned_opt, self.local_join_safe,
             )
             steps.append(StepPlan(kind, PatternSpec.of(qj), jv, c1, c2,
                                   checks, append_cols, out_vars))

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from .backend import range_search
+from .placement import splitmix64_jnp
 from .query import O, P, S, TriplePattern, Var
 from .relalg import bucket_by_dest, expand, unique_compact
 from .relation import Relation
@@ -56,16 +57,9 @@ __all__ = [
 I32MAX = jnp.iinfo(jnp.int32).max
 
 
-def jnp_hash_ids(x: jax.Array) -> jax.Array:
-    """splitmix64 finalizer — bit-identical to ``partition.hash_ids``."""
-    x = x.astype(jnp.uint64)
-    x = x + jnp.uint64(0x9E3779B97F4A7C15)
-    x = x ^ (x >> jnp.uint64(30))
-    x = x * jnp.uint64(0xBF58476D1CE4E5B9)
-    x = x ^ (x >> jnp.uint64(27))
-    x = x * jnp.uint64(0x94D049BB133111EB)
-    x = x ^ (x >> jnp.uint64(31))
-    return (x >> jnp.uint64(1)).astype(jnp.int64)
+# splitmix64 finalizer — bit-identical to ``partition.hash_ids``; historical
+# spelling of the canonical ``placement.splitmix64_jnp``.
+jnp_hash_ids = splitmix64_jnp
 
 
 # ---------------------------------------------------------------------------
@@ -190,40 +184,59 @@ def hash_send_buffers(
     n_workers: int,  # global worker count (the hash modulus)
     cap_peer: int,
     backend: str = "searchsorted",
+    spec=None,  # placement.PlacementSpec | None (None = plain hash owner)
+    table=None,  # placement.DirectoryTable operand when spec is directory
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Per-worker destination bucketing for the hash exchange.
 
     Shared by ``exchange_hash`` (whole worker axis) and the mesh substrate
     (local worker block, global destinations) — one definition, so the two
-    paths cannot drift.  Returns (send (W_block, n_workers, cap_peer),
-    send_valid, max_wanted (W_block,))."""
+    paths cannot drift.  With a directory placement spec, each value fans
+    out to the whole split set of its subject (replication factor is the
+    static ``spec.max_split``; excess replicas are invalid entries), since a
+    split subject's triples live on several shards and every one must be
+    probed.  Returns (send (W_block, n_workers, cap_peer), send_valid,
+    max_wanted (W_block,))."""
 
     def per_worker(p_w, v_w):
-        dest = (jnp_hash_ids(p_w) % n_workers).astype(jnp.int32)
+        if spec is None:
+            dest = (jnp_hash_ids(p_w) % n_workers).astype(jnp.int32)
+            send, svalid, max_wanted = bucket_by_dest(
+                p_w[:, None], dest, v_w, n_workers, cap_peer, backend=backend
+            )
+            return send[..., 0], svalid, max_wanted
+        dests, dvalid = spec.value_dests(p_w, v_w, table)  # (F, n) each
+        vals = jnp.broadcast_to(p_w[None], dests.shape).reshape(-1)
         send, svalid, max_wanted = bucket_by_dest(
-            p_w[:, None], dest, v_w, n_workers, cap_peer, backend=backend
+            vals[:, None], dests.reshape(-1), dvalid.reshape(-1),
+            n_workers, cap_peer, backend=backend
         )
         return send[..., 0], svalid, max_wanted
 
     return jax.vmap(per_worker)(proj, proj_valid)
 
 
-@partial(jax.jit, static_argnames=("cap_peer", "backend"))
+@partial(jax.jit, static_argnames=("cap_peer", "backend", "spec"))
 def exchange_hash(
     proj: jax.Array,  # (W, cap_proj)
     proj_valid: jax.Array,
     cap_peer: int,
     backend: str = "searchsorted",
+    spec=None,
+    table=None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Observation 1 fast path: hash-distribute the projected join column.
 
-    Under subject-hash partitioning the owner of subject v is H(v) mod W, so
-    each value goes to exactly one worker.  The (sender, receiver) transpose
-    lowers to all_to_all under sharding.  Returns (recv (W_recv, W_send,
-    cap_peer), recv_valid, cells_sent, max_bucket)."""
+    The placement policy names the owner(s) of each value: under the default
+    hash placement (``spec=None``) that is H(v) mod W and each value goes to
+    exactly one worker; under directory placement a split subject's value is
+    replicated to its whole split set (see ``hash_send_buffers``).  The
+    (sender, receiver) transpose lowers to all_to_all under sharding.
+    Returns (recv (W_recv, W_send, cap_peer), recv_valid, cells_sent,
+    max_bucket)."""
     w = proj.shape[0]
     send, svalid, maxw = hash_send_buffers(proj, proj_valid, w, cap_peer,
-                                           backend)
+                                           backend, spec=spec, table=table)
     # (W_sender, W_receiver, cap) -> (W_receiver, W_sender, cap): all_to_all
     recv = jnp.swapaxes(send, 0, 1)
     recv_valid = jnp.swapaxes(svalid, 0, 1)
@@ -457,15 +470,21 @@ def project_unique_batch(
     return jax.vmap(fn)(cols, valid)
 
 
-@partial(jax.jit, static_argnames=("cap_peer", "backend"))
+@partial(jax.jit, static_argnames=("cap_peer", "backend", "spec"))
 def exchange_hash_batch(
     proj: jax.Array,  # (B, W, cap_proj)
     proj_valid: jax.Array,
     cap_peer: int,
     backend: str = "searchsorted",
+    spec=None,
+    table=None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Batched ``exchange_hash``; cells (B,) is per-query wire accounting."""
-    fn = partial(exchange_hash, cap_peer=cap_peer, backend=backend)
+    """Batched ``exchange_hash``; cells (B,) is per-query wire accounting.
+
+    The placement exception table (if any) is closed over, i.e. broadcast
+    across the batch axis rather than vmapped."""
+    fn = lambda p, v: exchange_hash(p, v, cap_peer=cap_peer, backend=backend,
+                                    spec=spec, table=table)
     return jax.vmap(fn)(proj, proj_valid)
 
 

@@ -27,8 +27,8 @@ from .dictionary import Dictionary
 from .executor import Executor, ExecutorError, QueryStats
 from .heatmap import HeatMap
 from .ird import IncrementalRedistributor, IRDStats
-from .partition import partition_by_subject
 from .pattern_index import ParallelExecutor, PatternIndex, ReplicaIndex
+from .placement import resolve_placement
 from .planner import LocalityAwarePlanner, Plan
 from .query import Query, TriplePattern, Var
 from .relation import Relation
@@ -52,6 +52,8 @@ class EngineReport:
     ird_triples: int = 0
     n_redistributions: int = 0
     n_evictions: int = 0
+    n_rebalances: int = 0  # hot-key splits published (directory placement)
+    rebalance_comm_cells: int = 0  # main-store cells moved by rebalances
     n_batch_dispatches: int = 0  # batched-pipeline launches (query_batch)
     wall_time_s: float = 0.0
     history: list[tuple[str, int, float]] = field(default_factory=list)
@@ -79,6 +81,8 @@ class AdHashEngine:
         probe_backend: str = "auto",
         data_plane_backend: str | None = None,
         substrate=None,
+        placement=None,
+        skew_threshold: float = 2.0,
     ):
         from .substrate import SingleDeviceSubstrate
 
@@ -117,19 +121,43 @@ class AdHashEngine:
         )
         self.data_plane_backend = self.probe_backend
 
+        # placement policy: who owns each subject (DESIGN §8).  The default
+        # hash policy reproduces the historical H(s) mod W ingest and keeps
+        # every data-plane trace bit-identical; 'directory' enables the
+        # skew-resistant exception table + the rebalance hook below.
+        self.placement = resolve_placement(placement, n_workers)
+        self.skew_threshold = float(skew_threshold)
+
         # --- bootstrap (paper §3.4): partition, load, collect statistics
         self.n_ids = int(triples.max()) + 1 if triples.size else 1
-        assign = partition_by_subject(triples, n_workers)
+        assign = self.placement.place_triples_np(triples) if triples.size \
+            else np.zeros(0, dtype=np.int32)
         self.store = self.substrate.shard_store(ShardedTripleStore.build(
             triples, assign, n_workers, self.n_ids
         ))
         self.stats: GlobalStats = compute_stats(triples, self.n_ids)
+
+        # split-candidate pool for the skew detector: the top subjects by
+        # out-degree (star size == data-balance impact), scored against the
+        # heat map at trigger time.  Only materialized for policies that can
+        # actually split.
+        self._split_candidates: tuple[np.ndarray, np.ndarray] | None = None
+        if self.placement.supports_split and triples.size:
+            deg = np.bincount(triples[:, 0].astype(np.int64),
+                              minlength=self.n_ids)
+            k = min(64, int((deg > 0).sum()))
+            if k:
+                top = np.argpartition(deg, -k)[-k:]
+                self._split_candidates = (
+                    top.astype(np.int64), deg[top].astype(np.int64)
+                )
 
         oracle = self._count_pattern if use_count_oracle else None
         self.planner = LocalityAwarePlanner(self.stats, n_workers, oracle)
         self.executor = Executor(
             self.store, n_workers, locality_aware, pinned_opt,
             probe_backend=self.probe_backend, substrate=self.substrate,
+            placement=self.placement,
         )
         self.heatmap = HeatMap()
         self.pattern_index = PatternIndex()
@@ -141,6 +169,7 @@ class AdHashEngine:
         self.ird = IncrementalRedistributor(
             self.store, self.replicas, n_workers, self.capacity,
             probe_backend=self.probe_backend, substrate=self.substrate,
+            placement=self.placement,
         )
         self._no_redistribute: set = set()
         self.report = EngineReport()
@@ -198,10 +227,11 @@ class AdHashEngine:
             else:
                 self.report.n_distributed += 1
 
-        # (5) adaptivity: monitor + IRD
+        # (5) adaptivity: monitor + IRD + hot-key rebalancing
         if self.adaptive:
             self.heatmap.insert(tree)
             self._maybe_redistribute()
+            self._maybe_rebalance()
 
         dt = time.perf_counter() - t0
         self.report.n_queries += 1
@@ -261,7 +291,8 @@ class AdHashEngine:
         # per query: (Relation, QueryStats, wall seconds)
         results: list[tuple | None] = [None] * len(queries)
         batcher = WorkloadBatcher(
-            self.executor.locality_aware, self.executor.pinned_opt
+            self.executor.locality_aware, self.executor.pinned_opt,
+            self.placement.local_join_safe,
         )
         t_all = time.perf_counter()
 
@@ -306,6 +337,7 @@ class AdHashEngine:
             if self.adaptive:
                 self.heatmap.insert(tree)
                 self._maybe_redistribute(overlap=overlap)
+                self._maybe_rebalance(overlap=overlap)
 
         # the adaptivity control pass is complete for the whole workload;
         # now surface any failure an overlapped bucket hit (no results or
@@ -405,6 +437,64 @@ class AdHashEngine:
                     and self.pattern_index.match(hot.rtree) is None
                 ):
                     self._no_redistribute.add(key)
+
+    def _maybe_rebalance(self, overlap=None) -> None:
+        """Detect hot-key skew and schedule directory-placement splits.
+
+        Trigger: the loaded shard holds more than ``skew_threshold`` times
+        the mean shard load.  Candidates come from the bootstrap top-degree
+        pool, filtered to unsplit subjects living on the hot shard whose
+        star is large enough to matter (>= half the mean load), and scored
+        by star size weighted with the heat map's vertex frequency — a hub
+        that the workload actually queries outranks an idle one.
+
+        The main-store move runs through ``IRD.rebalance_deferred``: like a
+        redistribution it is dispatched asynchronously, ``overlap`` (the
+        query_batch bucket callback) executes while the exchange flies, and
+        the rebuilt store is published to every component only after the
+        barrier.  In-flight queries stay correct throughout: probe values
+        always include the base owner in their destination set, so a split
+        registered before the move lands only adds probe replicas."""
+        plc = self.placement
+        if not plc.supports_split or self._split_candidates is None:
+            return
+        counts = np.asarray(self.store.counts, dtype=np.int64)
+        mean = float(counts.mean())
+        if mean <= 0.0 or float(counts.max()) <= self.skew_threshold * mean:
+            return
+        hot_shard = int(counts.argmax())
+        subs, degs = self._split_candidates
+        on_hot = plc.owner_np(subs) == hot_shard
+        big = degs >= 0.5 * mean
+        vf = self.heatmap.vertex_frequencies()
+        scored = sorted(
+            (
+                (int(s), int(dg) * (1 + vf[int(s)]))
+                for s, dg in zip(subs[on_hot & big], degs[on_hot & big])
+                if int(s) not in plc.entries
+            ),
+            key=lambda t: -t[1],
+        )
+        picks = [s for s, _ in scored[:4]]
+        if not picks or not plc.add_splits(picks):
+            return
+        pending = self.ird.rebalance_deferred(plc)
+        try:
+            if overlap is not None:
+                overlap()  # rebalance exchange overlaps this evaluation
+        finally:
+            new_store, moved = pending.finalize()  # barrier first
+            self._publish_store(new_store)
+            self.report.n_rebalances += 1
+            self.report.rebalance_comm_cells += moved
+
+    def _publish_store(self, store) -> None:
+        """Atomically swap the main store into every component that holds a
+        reference (host-side pointer swaps; device work already fenced)."""
+        self.store = store
+        self.executor.store = store
+        self.parallel_exec.main = store
+        self.ird.main = store
 
     def _enforce_budget(self) -> None:
         if self.budget is None:

@@ -83,11 +83,18 @@ def step_descriptor(
     pinned: Var | None,
     locality_aware: bool,
     pinned_opt: bool,
+    local_join_safe: bool = True,
 ) -> tuple[str, int, int, tuple, tuple, tuple[Var, ...]]:
     """Static description of one join step: the §4.1.3 case selection plus
     the join-column/check/append layout.  Single source of truth — the
     sequential executor runs it and WorkloadBatcher buckets on it, so the
     two can never drift apart.
+
+    ``local_join_safe`` is the placement policy's guarantee that a subject's
+    whole star lives on one shard (``PlacementPolicy.local_join_safe``);
+    directory placements split hot stars across shards, so case (i) demotes
+    to the hash DSJ — the split set is then probed via the exchange's
+    replicated destinations.
 
     Returns (kind 'local'|'hash'|'bcast', c1, c2, checks, append_cols,
     out_vars)."""
@@ -101,6 +108,7 @@ def step_descriptor(
         and join_var == pinned
         and pinned_opt
         and locality_aware
+        and local_join_safe
     ):
         kind = "local"  # case (i): zero communication
     elif c2 == S and locality_aware:
@@ -141,13 +149,17 @@ class Executor:
         pinned_opt: bool = True,
         probe_backend: str = "auto",
         substrate=None,
+        placement=None,
     ):
+        from .placement import HashPlacement
         from .substrate import SingleDeviceSubstrate
 
         self.store = store
         self.w = n_workers
         self.locality_aware = locality_aware
         self.pinned_opt = pinned_opt
+        self.placement = placement if placement is not None else \
+            HashPlacement(n_workers)
         self.sub = substrate if substrate is not None else \
             SingleDeviceSubstrate()
         self.sub.check_workers(n_workers)
@@ -186,7 +198,7 @@ class Executor:
         consts = dsj.pattern_consts(q)
         kind, c1, c2, checks, append_cols, out_vars = step_descriptor(
             rel.vars, q, join_var, pinned, self.locality_aware,
-            self.pinned_opt,
+            self.pinned_opt, self.placement.local_join_safe,
         )
 
         # ---------------------------------------------------------- case (i)
@@ -224,9 +236,14 @@ class Executor:
 
         if hash_mode:
             cap_peer = cap_proj
+            # table fetched per call: a rebalance between queries swaps in a
+            # fresh exception table without touching compiled stages
+            pspec = self.placement.stage_spec
+            ptable = self.placement.device_table()
             for _ in range(_MAX_RETRIES):
                 recv, rvalid, cells, maxb = self.sub.exchange_hash(
-                    proj, pvalid, cap_peer, backend=self.backend
+                    proj, pvalid, cap_peer, backend=self.backend,
+                    spec=pspec, table=ptable,
                 )
                 if int(maxb) <= cap_peer:
                     break
@@ -408,9 +425,12 @@ class Executor:
 
         if hash_mode:
             cap_peer = cap_proj
+            pspec = self.placement.stage_spec
+            ptable = self.placement.device_table()
             for _ in range(_MAX_RETRIES):
                 recv, rvalid, cells, maxb = self.sub.exchange_hash_batch(
-                    proj, pvalid, cap_peer, backend=self.backend
+                    proj, pvalid, cap_peer, backend=self.backend,
+                    spec=pspec, table=ptable,
                 )
                 mb = int(jnp.max(maxb))
                 if mb <= cap_peer:

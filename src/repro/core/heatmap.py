@@ -124,6 +124,25 @@ class HeatMap:
         elif is_root:
             self.root_var_seen += 1
 
+    # ----------------------------------------------------- vertex frequency
+    def vertex_frequencies(self) -> Counter:
+        """Aggregate constant-vertex access counts across the whole map.
+
+        Sums the Boyer-Moore verification counters of the root and of every
+        edge's child metadata — i.e. how often each constant id appeared as
+        a query vertex.  The engine's skew detector uses this to prioritize
+        *workload-hot* hub subjects when choosing directory-placement
+        splits."""
+        total: Counter[int] = Counter(self.root_meta.freq)
+
+        def rec(table: dict[EdgeKey, HeatEdge]) -> None:
+            for he in table.values():
+                total.update(he.child_meta.freq)
+                rec(he.children)
+
+        rec(self.children)
+        return total
+
     # -------------------------------------------------------- hot detection
     def hot_patterns(self, threshold: int) -> list[HotPattern]:
         """Maximal root-anchored subtrees whose every edge count >= threshold.

@@ -60,7 +60,8 @@ from .query import O, S, TriplePattern, Var
 from .transform import RTree, TreeEdge, TreeNode
 from .triples import ShardedTripleStore
 
-__all__ = ["IRDStats", "IncrementalRedistributor", "PendingRedistribution"]
+__all__ = ["IRDStats", "IncrementalRedistributor", "PendingRedistribution",
+           "PendingRebalance"]
 
 _MAX_RETRIES = 7
 
@@ -141,13 +142,17 @@ class IncrementalRedistributor:
         capacity: int = 1 << 12,
         probe_backend: str = "auto",
         substrate=None,
+        placement=None,
     ):
+        from .placement import HashPlacement
         from .substrate import SingleDeviceSubstrate
 
         self.main = main
         self.replicas = replicas
         self.w = n_workers
         self.cap = quantize_capacity(capacity)
+        self.placement = placement if placement is not None else \
+            HashPlacement(n_workers)
         self.sub = substrate if substrate is not None else \
             SingleDeviceSubstrate()
         self.backend = self.sub.resolve_backend(probe_backend)
@@ -185,16 +190,24 @@ class IncrementalRedistributor:
             q = tree.query.patterns[idx]
             stats.n_edges += 1
             if depth == 0:
-                if edge.parent_is_subject:
+                if edge.parent_is_subject and self.placement.local_join_safe:
                     # footnote 7: subject-core edges stay in the main index
                     # (but their matches count as data touched by IRD —
                     # paper §6.4.3 counts "data in the main and replica
-                    # indices")
+                    # indices").  Only sound when the placement guarantees
+                    # subject collocation; a directory placement may split a
+                    # hot subject's star, so its subject-core edges are
+                    # collected into a replica module keyed by the subject
+                    # (base owner — no split salt, see
+                    # _hash_distribute_core_edge).
                     storage[idx] = None
                     store_of_edge[id(edge)] = None
                     self._count_matches(q, pending)
                 else:
-                    sid, st = self._hash_distribute_core_edge(q, pending)
+                    key_col = S if edge.parent_is_subject else O
+                    sid, st = self._hash_distribute_core_edge(
+                        q, pending, key_col
+                    )
                     storage[idx] = sid
                     store_of_edge[id(edge)] = st
             else:
@@ -228,9 +241,18 @@ class IncrementalRedistributor:
 
     # ----------------------------------------------------------- phase 1
     def _hash_distribute_core_edge(
-        self, q: TriplePattern, pending: PendingRedistribution
+        self, q: TriplePattern, pending: PendingRedistribution,
+        key_col: int = O,
     ) -> tuple[str, ShardedTripleStore]:
-        """Hash-distribute triples matching q on the core (object) binding."""
+        """Hash-distribute triples matching q on the core binding (column
+        ``key_col``).
+
+        Destinations come from the placement's *base* owner — deliberately
+        without the directory split salt: every edge module of a hot pattern
+        must place a given core binding on the *same* worker, or the
+        parallel-mode local joins between them would miss rows.  A split
+        star therefore concentrates in its replica modules (correctness
+        first); the skew win comes from the split main-store path."""
         spec = dsj.PatternSpec.of(q)
         consts = dsj.pattern_consts(q)
         cap = self.cap
@@ -241,9 +263,15 @@ class IncrementalRedistributor:
                 break
             cap = quantize_capacity(max(cap * 2, int(total)))
         w = self.w
+        pspec = self.placement.stage_spec
+        ptable = self.placement.device_table()
 
         def per_worker(rows_w, valid_w):
-            dest = (dsj.jnp_hash_ids(rows_w[:, O]) % w).astype(jnp.int32)
+            keys = rows_w[:, key_col]
+            if pspec is None:
+                dest = (dsj.jnp_hash_ids(keys) % w).astype(jnp.int32)
+            else:
+                dest = pspec.owner_dest(keys, valid_w, ptable)
             from .relalg import bucket_by_dest
 
             return bucket_by_dest(rows_w, dest, valid_w, w, cap,
@@ -315,9 +343,14 @@ class IncrementalRedistributor:
         src_col = S if edge.parent_is_subject else O
         if src_col == S:
             cap_peer = cap_proj
+            # probes the main index, so split subjects need the placement's
+            # replicated destinations (same as query-time case ii)
+            plc_spec = self.placement.stage_spec
+            plc_table = self.placement.device_table()
             for _ in range(_MAX_RETRIES):
                 recv, rvalid, cells, maxb = self.sub.exchange_hash(
-                    proj, projv, cap_peer, backend=self.backend
+                    proj, projv, cap_peer, backend=self.backend,
+                    spec=plc_spec, table=plc_table,
                 )
                 if int(maxb) <= cap_peer:
                     break
@@ -349,3 +382,90 @@ class IncrementalRedistributor:
         sid = self.replicas.new_id()
         self.replicas.put(sid, st)
         return sid, st
+
+    # ----------------------------------------------------- main-store moves
+    def rebalance_deferred(self, placement) -> "PendingRebalance":
+        """Re-place the *main* store under a (new) placement policy,
+        asynchronously — the hot-key analogue of ``redistribute_deferred``.
+
+        Every worker buckets its live triples by ``placement.triple_dest``
+        (split subjects fan out over their split set, salted by the object),
+        the (sender, receiver) transpose ships them, and the receiving
+        shards are sort-indexed through the same fused dispatch as replica
+        modules.  Nothing here blocks: the caller overlaps query traffic and
+        calls ``finalize()`` before publishing the rebuilt store.
+
+        Note the rebuild flows through ``from_device_rows``, which drops
+        exact duplicate triples — RDF set semantics, and the main store is
+        duplicate-free after bootstrap anyway."""
+        main = self.main
+        w = self.w
+        capT = main.capacity
+        rows = main.spo_ps  # (W, capT, 3); first counts[w] rows are live
+        valid = jnp.arange(capT)[None, :] < main.counts[:, None]
+        pspec = placement.stage_spec
+        ptable = placement.device_table()
+
+        from .relalg import bucket_by_dest
+
+        def make_per_worker(cap_peer):
+            def per_worker(rows_w, valid_w):
+                s = rows_w[:, S]
+                o = rows_w[:, O]
+                if pspec is None:
+                    dest = (dsj.jnp_hash_ids(s) % w).astype(jnp.int32)
+                else:
+                    dest = pspec.triple_dest(s, o, valid_w, ptable)
+                return bucket_by_dest(rows_w, dest, valid_w, w, cap_peer,
+                                      backend=self.backend)
+
+            return per_worker
+
+        # start near the balanced shard size; retry-double on skew overflow
+        cap_peer = quantize_capacity(
+            max(int(jnp.max(main.counts)) // max(w // 2, 1), 1)
+        )
+        for _ in range(_MAX_RETRIES):
+            send, svalid, maxw = jax.vmap(make_per_worker(cap_peer))(
+                rows, valid
+            )
+            if int(jnp.max(maxw)) <= cap_peer:
+                break
+            cap_peer = quantize_capacity(max(cap_peer * 2, int(jnp.max(maxw))))
+        else:
+            raise RuntimeError("rebalance bucketing exceeded retry budget")
+
+        recv = jnp.swapaxes(send, 0, 1).reshape(w, -1, 3)
+        rvalid = jnp.swapaxes(svalid, 0, 1).reshape(w, -1)
+        diag = jnp.sum(svalid[jnp.arange(w), jnp.arange(w)])
+        pending = PendingRebalance()
+        pending._cells.append((jnp.sum(svalid) - diag) * 3)
+        st = _index_replica_rows(recv, rvalid, main.n_ids)
+        st = self.sub.shard_store(st)
+        pending.store = st
+        pending._barrier.extend(st.tree_flatten()[0])
+        return pending
+
+
+@dataclass
+class PendingRebalance:
+    """A dispatched-but-not-yet-published main-store rebalance.
+
+    ``finalize()`` barriers on the rebuilt shards and returns
+    (new_store, moved_cells); the engine then republishes the store to every
+    component (executor, IRD, parallel executor) atomically on the host."""
+
+    store: ShardedTripleStore | None = None
+    _cells: list = field(default_factory=list)
+    _barrier: list = field(default_factory=list)
+    _done: bool = False
+    _moved: int = 0
+
+    def finalize(self) -> tuple[ShardedTripleStore, int]:
+        if not self._done:
+            jax.block_until_ready(self._barrier)
+            self._moved = sum(int(c) for c in self._cells)
+            self._cells.clear()
+            self._barrier.clear()
+            self._done = True
+        return self.store, self._moved

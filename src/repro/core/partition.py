@@ -1,12 +1,17 @@
 """Initial data partitioning (paper §3.1, "Data Partitioner"; Table 2).
 
-AdHash hash-partitions triples on the *subject*: triple t goes to worker
-``H(t.subject) mod W``.  We also implement the two alternatives the paper
-evaluates in Table 2 — hashing on objects and random placement — plus a
-min-cut-style heavy baseline (``MinCutLite``) used by the startup-cost
-benchmark (paper Table 9) to stand in for METIS-class partitioners.
+AdHash hash-partitions triples on the *subject*: by default triple t goes to
+worker ``H(t.subject) mod W``, but the owner computation is owned by the
+placement layer (``repro.core.placement``, DESIGN §8) — engines built with a
+``DirectoryPlacement`` overlay an exception table that splits hot subjects
+across shards, so ``H(s) mod W`` is the *default policy*, not an invariant.
+We also implement the two alternatives the paper evaluates in Table 2 —
+hashing on objects and random placement — plus a min-cut-style heavy
+baseline (``MinCutLite``) used by the startup-cost benchmark (paper Table 9)
+to stand in for METIS-class partitioners.
 
-Hash function: a cheap integer mix (splitmix-like).  The paper footnote uses
+Hash function: a cheap integer mix (splitmix64 finalizer, canonically
+defined in ``placement.splitmix64_np``).  The paper footnote uses
 ``subject mod W``; a mixed hash keeps the same locality property (all triples
 of one subject colocate) while being robust to structured id assignment.  Both
 are provided; the engine defaults to the mixed hash.
@@ -16,6 +21,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 import numpy as np
+
+from .placement import splitmix64_np
 
 __all__ = [
     "hash_ids",
@@ -28,21 +35,17 @@ __all__ = [
 
 
 def hash_ids(ids: np.ndarray, mix: bool = True) -> np.ndarray:
-    """Vectorized 64-bit integer mix (splitmix64 finalizer), non-negative."""
+    """Vectorized 64-bit integer mix (splitmix64 finalizer), non-negative.
+
+    Historical spelling — the canonical definition lives in
+    ``placement.splitmix64_np`` (shared with the jax twin)."""
     if not mix:
         return np.asarray(ids, dtype=np.int64)
-    x = np.asarray(ids, dtype=np.uint64)
-    x = (x + np.uint64(0x9E3779B97F4A7C15)) & np.uint64(0xFFFFFFFFFFFFFFFF)
-    x ^= x >> np.uint64(30)
-    x = (x * np.uint64(0xBF58476D1CE4E5B9)) & np.uint64(0xFFFFFFFFFFFFFFFF)
-    x ^= x >> np.uint64(27)
-    x = (x * np.uint64(0x94D049BB133111EB)) & np.uint64(0xFFFFFFFFFFFFFFFF)
-    x ^= x >> np.uint64(31)
-    return (x >> np.uint64(1)).astype(np.int64)  # keep sign bit clear
+    return splitmix64_np(ids)
 
 
 def partition_by_subject(triples: np.ndarray, w: int, mix: bool = True) -> np.ndarray:
-    """Worker id per triple: H(subject) mod W (the AdHash default)."""
+    """Worker id per triple: H(subject) mod W (the AdHash default policy)."""
     return (hash_ids(triples[:, 0], mix) % w).astype(np.int32)
 
 

@@ -254,8 +254,10 @@ class ParallelExecutor:
 
     def _store_for(self, qedge: TreeEdge, pie: PIEdge, depth: int
                    ) -> ShardedTripleStore:
-        if depth == 0 and qedge.parent_is_subject:
-            return self.main  # core-subject edges live in the main index
+        # footnote-7 edges (subject-core under a collocating placement) are
+        # recorded with storage_id None by IRD and served by the main index;
+        # under a directory placement IRD materializes a replica module even
+        # for subject-core edges, so the storage id alone routes correctly
         if pie.storage_id is None:
             return self.main
         return self.replicas.get(pie.storage_id)

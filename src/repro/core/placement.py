@@ -1,0 +1,410 @@
+"""First-class placement layer: pluggable subject->shard mapping (DESIGN §8).
+
+AdHash's startup partitioning hashes triples on the subject, and that same
+owner computation reappears at every level of the data plane: ingest
+(``partition.partition_by_subject``), the DSJ hash-exchange destinations
+(``dsj.hash_send_buffers``), and IRD's replica placement.  This module makes
+the rule *pluggable* — a :class:`PlacementPolicy` answers every "which worker
+owns vertex v?" question — so skew resistance (splitting a hot hub subject
+across shards) is expressible without touching any stage.
+
+Two policies:
+
+``HashPlacement``
+    The AdHash default, bit-identical to the historical hard-coded rule:
+    owner(v) = splitmix64(v) mod W.  Stages receive ``spec=None`` for this
+    policy, so their traced code — and therefore their jit cache keys — are
+    exactly what they were before the placement layer existed.  Every parity
+    suite (sequential / batched / mesh, comm cells, recompile counts) holds
+    against this policy by construction.
+
+``DirectoryPlacement``
+    Hash placement overlaid with a small *device-resident exception table*
+    of hot subjects.  A table entry maps subject s to (base shard b_s,
+    power-of-two split factor f_s): the triples of s are spread over the
+    *split set* {(b_s + k) mod W : k < f_s}, salted by the object —
+    ``owner(s, o) = (b_s + H(o) mod f_s) mod W`` — so a hub star no longer
+    lands on one worker.  The table enters the jitted stages as an
+    **operand** (a :class:`DirectoryTable` pytree of three flat arrays), not
+    a static argument: adding entries never retraces.  Its capacity is
+    quantized to power-of-two classes, so warmed caches survive table growth
+    until the class itself doubles.  Probe values bound to a possibly-split
+    subject are *replicated* to the whole split set during the hash exchange
+    (``PlacementSpec.value_dests``), which keeps the DSJ semantics complete:
+    every shard holding a part of the split star is probed.
+
+The static part of a policy — worker count, maximum split factor — travels
+as a tiny frozen :class:`PlacementSpec` (a hashable jit cache key);
+``max_split`` bounds the trace-time replication fan-out, so a spec with
+``max_split=1`` compiles to exactly the single-destination hash path.
+
+This module is also the single home of the splitmix64 finalizer: the
+numpy (:func:`splitmix64_np`) and jax (:func:`splitmix64_jnp`) spellings are
+defined here once and re-exported by ``partition.hash_ids`` and
+``dsj.jnp_hash_ids`` (the historical names), with a cross-impl parity
+regression in tests/test_placement.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .backend import quantize_capacity
+
+__all__ = [
+    "splitmix64_np",
+    "splitmix64_jnp",
+    "DirectoryTable",
+    "PlacementSpec",
+    "PlacementPolicy",
+    "HashPlacement",
+    "DirectoryPlacement",
+    "resolve_placement",
+]
+
+I64MAX = np.iinfo(np.int64).max
+_TABLE_FLOOR = 64  # smallest exception-table capacity class
+
+
+# ---------------------------------------------------------------------------
+# The canonical hash: splitmix64 finalizer, one definition per array library.
+# ---------------------------------------------------------------------------
+def splitmix64_np(ids: np.ndarray) -> np.ndarray:
+    """Vectorized 64-bit integer mix (splitmix64 finalizer), non-negative."""
+    x = np.asarray(ids, dtype=np.uint64)
+    x = (x + np.uint64(0x9E3779B97F4A7C15)) & np.uint64(0xFFFFFFFFFFFFFFFF)
+    x ^= x >> np.uint64(30)
+    x = (x * np.uint64(0xBF58476D1CE4E5B9)) & np.uint64(0xFFFFFFFFFFFFFFFF)
+    x ^= x >> np.uint64(27)
+    x = (x * np.uint64(0x94D049BB133111EB)) & np.uint64(0xFFFFFFFFFFFFFFFF)
+    x ^= x >> np.uint64(31)
+    return (x >> np.uint64(1)).astype(np.int64)  # keep sign bit clear
+
+
+def splitmix64_jnp(x: jax.Array) -> jax.Array:
+    """splitmix64 finalizer — bit-identical to :func:`splitmix64_np`."""
+    x = x.astype(jnp.uint64)
+    x = x + jnp.uint64(0x9E3779B97F4A7C15)
+    x = x ^ (x >> jnp.uint64(30))
+    x = x * jnp.uint64(0xBF58476D1CE4E5B9)
+    x = x ^ (x >> jnp.uint64(27))
+    x = x * jnp.uint64(0x94D049BB133111EB)
+    x = x ^ (x >> jnp.uint64(31))
+    return (x >> jnp.uint64(1)).astype(jnp.int64)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident exception table (a pytree operand, never a static argument)
+# ---------------------------------------------------------------------------
+class DirectoryTable(NamedTuple):
+    """Hot-subject exception table, padded to a power-of-two capacity class.
+
+    ``keys`` are sorted subject ids (pad = I64MAX so padding never matches a
+    searchsorted probe); ``base``/``logf`` carry the base shard and the log2
+    split factor per entry.  A NamedTuple is automatically a pytree, so the
+    table flows through jit / vmap / shard_map as three replicated leaves —
+    growing the *contents* (same capacity class) changes no shapes and
+    triggers no retrace."""
+
+    keys: jax.Array  # (C,) int64, sorted, padded with I64MAX
+    base: jax.Array  # (C,) int32 base shard per entry
+    logf: jax.Array  # (C,) int32 log2(split factor) per entry
+
+
+def _table_lookup(table: DirectoryTable, v64: jax.Array, valid: jax.Array
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(hit, base, logf) per value — one searchsorted over the sorted keys."""
+    idx = jnp.clip(jnp.searchsorted(table.keys, v64), 0,
+                   table.keys.shape[0] - 1)
+    hit = (table.keys[idx] == v64) & valid
+    return hit, table.base[idx], table.logf[idx]
+
+
+# ---------------------------------------------------------------------------
+# Static spec: the hashable part of a policy, traced into the stages
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class PlacementSpec:
+    """Static placement descriptor — a jit cache key, never an operand.
+
+    ``max_split`` bounds every table entry's split factor and therefore the
+    trace-time replication fan-out of :meth:`value_dests`; table *contents*
+    stay dynamic (the :class:`DirectoryTable` operand)."""
+
+    kind: str  # "directory" (hash placement passes spec=None to the stages)
+    n_workers: int
+    max_split: int = 1
+
+    # ------------------------------------------------------- traced helpers
+    def owner_dest(self, keys: jax.Array, valid: jax.Array,
+                   table: DirectoryTable | None) -> jax.Array:
+        """Single *base* destination per value (no split salt).
+
+        Used where all rows of one vertex must collocate on a single shard
+        regardless of splits (IRD replica modules: parallel-mode local joins
+        probe them shard-locally, so a split star's parts must not scatter
+        across modules)."""
+        w = self.n_workers
+        h = (splitmix64_jnp(keys) % w).astype(jnp.int32)
+        if table is None or self.max_split == 1:
+            return h
+        hit, base, _ = _table_lookup(table, keys.astype(jnp.int64), valid)
+        return jnp.where(hit, base, h)
+
+    def triple_dest(self, s: jax.Array, o: jax.Array, valid: jax.Array,
+                    table: DirectoryTable | None) -> jax.Array:
+        """Destination of a (s, p, o) triple: base shard of s, salted by
+        H(o) within the split set — the device twin of
+        ``PlacementPolicy.place_triples_np``."""
+        w = self.n_workers
+        h = (splitmix64_jnp(s) % w).astype(jnp.int32)
+        if table is None or self.max_split == 1:
+            return h
+        hit, base, logf = _table_lookup(table, s.astype(jnp.int64), valid)
+        f = (jnp.int32(1) << logf).astype(jnp.int64)
+        salt = (splitmix64_jnp(o) % f).astype(jnp.int32)
+        return jnp.where(hit, (base + salt) % w, h)
+
+    def value_dests(self, vals: jax.Array, valid: jax.Array,
+                    table: DirectoryTable | None
+                    ) -> tuple[jax.Array, jax.Array]:
+        """Replicated destinations of probe values: (dests (F, n), dvalid).
+
+        A value bound to a split subject must reach *every* shard in the
+        split set — its triples are spread over all of them — so replica k
+        targets (base + k) mod W and is valid iff k < f(v).  With
+        ``max_split == 1`` this is statically the plain hash path: one
+        destination row, no table reads."""
+        w = self.n_workers
+        h = (splitmix64_jnp(vals) % w).astype(jnp.int32)
+        if table is None or self.max_split == 1:
+            return h[None], valid[None]
+        hit, base, logf = _table_lookup(table, vals.astype(jnp.int64), valid)
+        base = jnp.where(hit, base, h)
+        f = jnp.where(hit, jnp.int32(1) << logf, jnp.int32(1))
+        k = jnp.arange(self.max_split, dtype=jnp.int32)[:, None]  # (F, 1)
+        dests = (base[None] + k) % w
+        dvalid = valid[None] & (k < f[None])
+        return dests, dvalid
+
+
+# ---------------------------------------------------------------------------
+# Host-facing policies
+# ---------------------------------------------------------------------------
+class PlacementPolicy:
+    """Owner computations for ingest (host numpy) + the data plane (traced).
+
+    ``stage_spec`` / ``device_table()`` are what executors thread into the
+    jitted stages: (None, None) for hash placement — the stages then trace
+    their historical single-destination code exactly — or a
+    (:class:`PlacementSpec`, :class:`DirectoryTable`) pair for directory
+    placement."""
+
+    name: str = "placement"
+    #: case (i) zero-communication local joins (and IRD's footnote-7
+    #: "subject-core edges stay in the main index") are sound iff a subject's
+    #: whole star is guaranteed local to one shard
+    local_join_safe: bool = True
+    #: whether the engine's skew detector may schedule splits on this policy
+    supports_split: bool = False
+
+    @property
+    def stage_spec(self) -> PlacementSpec | None:
+        raise NotImplementedError
+
+    def device_table(self) -> DirectoryTable | None:
+        raise NotImplementedError
+
+    def place_triples_np(self, triples: np.ndarray) -> np.ndarray:
+        """Worker id per (N, 3) triple row (ingest path)."""
+        raise NotImplementedError
+
+    def owner_np(self, ids: np.ndarray) -> np.ndarray:
+        """Base owner per vertex id (split salt excluded) — load accounting
+        and split-candidate selection."""
+        raise NotImplementedError
+
+    def fingerprint(self) -> tuple:
+        """Canonical snapshot for parity tests."""
+        raise NotImplementedError
+
+
+class HashPlacement(PlacementPolicy):
+    """owner(v) = splitmix64(v) mod W — the AdHash default, bit-identical to
+    the pre-placement-layer hard-coded rule (``stage_spec`` is None, so the
+    stages trace and cache exactly their historical code)."""
+
+    name = "hash"
+    local_join_safe = True
+    supports_split = False
+
+    def __init__(self, n_workers: int):
+        self.w = n_workers
+
+    @property
+    def stage_spec(self) -> None:
+        return None
+
+    def device_table(self) -> None:
+        return None
+
+    def place_triples_np(self, triples: np.ndarray) -> np.ndarray:
+        triples = np.asarray(triples)
+        return (splitmix64_np(triples[:, 0]) % self.w).astype(np.int32)
+
+    def owner_np(self, ids: np.ndarray) -> np.ndarray:
+        return (splitmix64_np(ids) % self.w).astype(np.int32)
+
+    def fingerprint(self) -> tuple:
+        return ("hash", self.w)
+
+
+class DirectoryPlacement(PlacementPolicy):
+    """Hash placement + a device-resident exception table of split subjects.
+
+    ``local_join_safe`` is False from construction — not merely once the
+    table is non-empty — so an engine on this policy always runs the
+    split-safe plan shapes (case (i) demoted to hash DSJ, IRD replicating
+    subject-core edges): adding a split later never invalidates previously
+    published pattern-index state.
+    """
+
+    name = "directory"
+    local_join_safe = False
+    supports_split = True
+
+    def __init__(self, n_workers: int, *, max_split: int | None = None):
+        self.w = n_workers
+        if max_split is None:
+            max_split = min(8, n_workers)
+        # power-of-two split factors only: consistent split sets across
+        # growth, and the modulus compiles to a mask
+        ms = 1
+        while ms * 2 <= max_split:
+            ms *= 2
+        self.max_split = max(ms, 1)
+        # subject id -> (base shard, log2 split factor)
+        self.entries: dict[int, tuple[int, int]] = {}
+        self._spec = PlacementSpec("directory", n_workers,
+                                   max_split=self.max_split)
+        self._table: DirectoryTable | None = None
+        self._np_cache: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None
+        self.version = 0
+
+    # ------------------------------------------------------------- mutation
+    def add_splits(self, subjects, logf: int | None = None) -> list[int]:
+        """Register split entries for ``subjects``; returns those added.
+
+        Base shard stays the subject's hash owner, so unsplit lookups and
+        the k=0 member of every split set agree with plain hash placement.
+        The split factor is a power of two (default: the policy maximum),
+        making split sets nest across factor growth."""
+        if logf is None:
+            logf = self.max_split.bit_length() - 1
+        f = 1 << logf
+        if not (1 <= f <= self.max_split):
+            raise ValueError(
+                f"split factor {f} outside [1, max_split={self.max_split}]"
+            )
+        added = []
+        for s in subjects:
+            s = int(s)
+            if s in self.entries:
+                continue
+            base = int(splitmix64_np(np.asarray([s]))[0] % self.w)
+            self.entries[s] = (base, logf)
+            added.append(s)
+        if added:
+            self.version += 1
+            self._table = None
+            self._np_cache = None
+        return added
+
+    # ------------------------------------------------------------ accessors
+    @property
+    def stage_spec(self) -> PlacementSpec:
+        return self._spec
+
+    def table_capacity(self) -> int:
+        """Current power-of-two capacity class of the exception table."""
+        return quantize_capacity(max(len(self.entries), 1),
+                                 floor=_TABLE_FLOOR)
+
+    def device_table(self) -> DirectoryTable:
+        if self._table is None:
+            keys_np, base_np, logf_np = self._np_arrays()
+            cap = self.table_capacity()
+            keys = np.full(cap, I64MAX, dtype=np.int64)
+            base = np.zeros(cap, dtype=np.int32)
+            logf = np.zeros(cap, dtype=np.int32)
+            n = len(keys_np)
+            keys[:n], base[:n], logf[:n] = keys_np, base_np, logf_np
+            self._table = DirectoryTable(
+                jnp.asarray(keys), jnp.asarray(base), jnp.asarray(logf)
+            )
+        return self._table
+
+    def _np_arrays(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        if self._np_cache is None:
+            ks = np.sort(np.fromiter(self.entries, dtype=np.int64,
+                                     count=len(self.entries)))
+            base = np.array([self.entries[int(k)][0] for k in ks],
+                            dtype=np.int32)
+            logf = np.array([self.entries[int(k)][1] for k in ks],
+                            dtype=np.int32)
+            self._np_cache = (ks, base, logf)
+        return self._np_cache
+
+    # ----------------------------------------------------------- host owner
+    def place_triples_np(self, triples: np.ndarray) -> np.ndarray:
+        triples = np.asarray(triples)
+        s = triples[:, 0].astype(np.int64)
+        h = (splitmix64_np(s) % self.w).astype(np.int32)
+        if not self.entries:
+            return h
+        keys, base, logf = self._np_arrays()
+        idx = np.clip(np.searchsorted(keys, s), 0, len(keys) - 1)
+        hit = keys[idx] == s
+        f = (np.int64(1) << logf[idx].astype(np.int64))
+        salt = (splitmix64_np(triples[:, 2]) % f).astype(np.int32)
+        return np.where(hit, (base[idx] + salt) % self.w, h).astype(np.int32)
+
+    def owner_np(self, ids: np.ndarray) -> np.ndarray:
+        ids = np.asarray(ids, dtype=np.int64)
+        h = (splitmix64_np(ids) % self.w).astype(np.int32)
+        if not self.entries:
+            return h
+        keys, base, _ = self._np_arrays()
+        idx = np.clip(np.searchsorted(keys, ids), 0, len(keys) - 1)
+        hit = keys[idx] == ids
+        return np.where(hit, base[idx], h).astype(np.int32)
+
+    def split_factor(self, s: int) -> int:
+        e = self.entries.get(int(s))
+        return 1 << e[1] if e is not None else 1
+
+    def fingerprint(self) -> tuple:
+        return ("directory", self.w, self.max_split,
+                tuple(sorted(self.entries.items())))
+
+
+def resolve_placement(placement, n_workers: int) -> PlacementPolicy:
+    """Engine-facing constructor: None/'hash' -> HashPlacement,
+    'directory' -> DirectoryPlacement, or a policy instance passed through
+    (its worker count must match)."""
+    if placement is None or placement == "hash":
+        return HashPlacement(n_workers)
+    if placement == "directory":
+        return DirectoryPlacement(n_workers)
+    if isinstance(placement, PlacementPolicy):
+        w = getattr(placement, "w", n_workers)
+        if w != n_workers:
+            raise ValueError(
+                f"placement built for {w} workers, engine has {n_workers}"
+            )
+        return placement
+    raise ValueError(f"unknown placement {placement!r}")

@@ -232,9 +232,10 @@ class MeshSubstrate(Substrate):
                                        backend=backend)
 
     def exchange_hash(self, proj, proj_valid, cap_peer,
-                      backend="searchsorted"):
+                      backend="searchsorted", spec=None, table=None):
         return _exchange_hash_sharded(self.mesh, self.axis, proj, proj_valid,
-                                      cap_peer=cap_peer, backend=backend)
+                                      cap_peer=cap_peer, backend=backend,
+                                      pspec=spec, table=table)
 
     def exchange_broadcast(self, proj, proj_valid):
         return _exchange_broadcast_sharded(self.mesh, self.axis, proj,
@@ -304,10 +305,11 @@ class MeshSubstrate(Substrate):
         )
 
     def exchange_hash_batch(self, proj, proj_valid, cap_peer,
-                            backend="searchsorted"):
+                            backend="searchsorted", spec=None, table=None):
         return _exchange_hash_batch_sharded(self.mesh, self.axis, proj,
                                             proj_valid, cap_peer=cap_peer,
-                                            backend=backend)
+                                            backend=backend, pspec=spec,
+                                            table=table)
 
     def exchange_broadcast_batch(self, proj, proj_valid):
         return _exchange_broadcast_batch_sharded(self.mesh, self.axis, proj,
@@ -450,13 +452,36 @@ def _project_unique_sharded(mesh, axis, cols, valid, col_idx, cap_proj,
                  (_pw(axis), _pw(axis), _PR))(cols, valid)
 
 
-@partial(jax.jit, static_argnames=("mesh", "axis", "cap_peer", "backend"))
-def _exchange_hash_sharded(mesh, axis, proj, proj_valid, cap_peer, backend):
+@partial(jax.jit, static_argnames=("mesh", "axis", "cap_peer", "backend",
+                                   "pspec"))
+def _exchange_hash_sharded(mesh, axis, proj, proj_valid, cap_peer, backend,
+                           pspec=None, table=None):
     w_global = proj.shape[0]
 
-    def body(proj, proj_valid):
+    # Placement exception table (directory policies): a *replicated* operand
+    # of the shard_map body — every shard reads the same table, and table
+    # growth within a capacity class is just new operand values, no retrace.
+    # The hash path (pspec None) does not thread the table at all, so its
+    # traced body and jit cache keys are exactly the historical ones.
+    if pspec is None:
+
+        def body(proj, proj_valid):
+            send, svalid, maxw = dsj.hash_send_buffers(
+                proj, proj_valid, w_global, cap_peer, backend
+            )
+            recv = _block_transpose(axis, send, 0)
+            recv_valid = _block_transpose(axis, svalid, 0)
+            cells = _offdiag_cells(axis, svalid)
+            maxb = jax.lax.pmax(jnp.max(maxw), axis)
+            return recv, recv_valid, cells.astype(jnp.int64), maxb
+
+        return _wrap(body, mesh, axis, (_pw(axis), _pw(axis)),
+                     (_pw(axis), _pw(axis), _PR, _PR))(proj, proj_valid)
+
+    def body(proj, proj_valid, table):
         send, svalid, maxw = dsj.hash_send_buffers(
-            proj, proj_valid, w_global, cap_peer, backend
+            proj, proj_valid, w_global, cap_peer, backend,
+            spec=pspec, table=table,
         )
         recv = _block_transpose(axis, send, 0)
         recv_valid = _block_transpose(axis, svalid, 0)
@@ -464,8 +489,8 @@ def _exchange_hash_sharded(mesh, axis, proj, proj_valid, cap_peer, backend):
         maxb = jax.lax.pmax(jnp.max(maxw), axis)
         return recv, recv_valid, cells.astype(jnp.int64), maxb
 
-    return _wrap(body, mesh, axis, (_pw(axis), _pw(axis)),
-                 (_pw(axis), _pw(axis), _PR, _PR))(proj, proj_valid)
+    return _wrap(body, mesh, axis, (_pw(axis), _pw(axis), _PR),
+                 (_pw(axis), _pw(axis), _PR, _PR))(proj, proj_valid, table)
 
 
 @partial(jax.jit, static_argnames=("mesh", "axis"))
@@ -618,15 +643,35 @@ def _project_unique_batch_sharded(mesh, axis, cols, valid, col_idx, cap_proj,
                  (_pb(axis), _pb(axis), _PR))(cols, valid)
 
 
-@partial(jax.jit, static_argnames=("mesh", "axis", "cap_peer", "backend"))
+@partial(jax.jit, static_argnames=("mesh", "axis", "cap_peer", "backend",
+                                   "pspec"))
 def _exchange_hash_batch_sharded(mesh, axis, proj, proj_valid, cap_peer,
-                                 backend):
+                                 backend, pspec=None, table=None):
     w_global = proj.shape[1]
 
-    def body(proj, proj_valid):  # (B, W_local, cap_proj)
+    # See _exchange_hash_sharded: the exception table is a replicated body
+    # operand on the directory path and absent on the hash path.
+    if pspec is None:
+
+        def body(proj, proj_valid):  # (B, W_local, cap_proj)
+            send, svalid, maxw = jax.vmap(
+                lambda p, v: dsj.hash_send_buffers(p, v, w_global, cap_peer,
+                                                   backend)
+            )(proj, proj_valid)
+            recv = _block_transpose(axis, send, 1)
+            recv_valid = _block_transpose(axis, svalid, 1)
+            cells = _offdiag_cells_batch(axis, svalid)
+            maxb = jax.lax.pmax(jnp.max(maxw, axis=1), axis)
+            return recv, recv_valid, cells.astype(jnp.int64), maxb
+
+        return _wrap(body, mesh, axis, (_pb(axis), _pb(axis)),
+                     (_pb(axis), _pb(axis), _PR, _PR))(proj, proj_valid)
+
+    def body(proj, proj_valid, table):  # (B, W_local, cap_proj)
         send, svalid, maxw = jax.vmap(
             lambda p, v: dsj.hash_send_buffers(p, v, w_global, cap_peer,
-                                               backend)
+                                               backend, spec=pspec,
+                                               table=table)
         )(proj, proj_valid)
         recv = _block_transpose(axis, send, 1)
         recv_valid = _block_transpose(axis, svalid, 1)
@@ -634,8 +679,8 @@ def _exchange_hash_batch_sharded(mesh, axis, proj, proj_valid, cap_peer,
         maxb = jax.lax.pmax(jnp.max(maxw, axis=1), axis)
         return recv, recv_valid, cells.astype(jnp.int64), maxb
 
-    return _wrap(body, mesh, axis, (_pb(axis), _pb(axis)),
-                 (_pb(axis), _pb(axis), _PR, _PR))(proj, proj_valid)
+    return _wrap(body, mesh, axis, (_pb(axis), _pb(axis), _PR),
+                 (_pb(axis), _pb(axis), _PR, _PR))(proj, proj_valid, table)
 
 
 @partial(jax.jit, static_argnames=("mesh", "axis"))

@@ -19,7 +19,8 @@ import numpy as np
 from repro.core.dictionary import Dictionary
 from repro.core.query import Const, Query, TriplePattern, Var
 
-__all__ = ["lubm_like", "Workload", "lubm_queries"]
+__all__ = ["lubm_like", "Workload", "lubm_queries", "zipf_skew",
+           "zipf_workload"]
 
 PREDICATES = (
     "rdf:type",
@@ -79,6 +80,64 @@ def lubm_like(
                     ):
                         t.append((stud, "ub:takesCourse", courses[c]))
     return d, d.encode_triples(t)
+
+
+def zipf_skew(
+    n_subjects: int = 512,
+    n_triples: int = 60_000,
+    n_objects: int = 8192,
+    n_predicates: int = 8,
+    exponent: float = 1.4,
+    seed: int = 0,
+) -> np.ndarray:
+    """Deliberately hot-key-skewed triples: subject popularity ~ Zipf.
+
+    Subject of each triple is drawn with probability proportional to
+    ``rank^-exponent`` — at exponent 1.4 the top subject owns roughly a
+    third of all triples, the classic hub star that defeats subject-hash
+    partitioning (every one of its triples lands on one shard).  Ids are
+    laid out [predicates | subjects | objects] so the three ranges never
+    collide; exact duplicate triples are dropped (RDF set semantics).
+
+    Returns (N, 3) int64 triples (subject hotness decreasing with id)."""
+    rng = np.random.default_rng(seed)
+    s_base = n_predicates
+    o_base = s_base + n_subjects
+    ranks = np.arange(1, n_subjects + 1, dtype=np.float64)
+    probs = ranks ** -float(exponent)
+    probs /= probs.sum()
+    s = rng.choice(n_subjects, size=n_triples, p=probs) + s_base
+    p = rng.integers(0, n_predicates, size=n_triples)
+    o = rng.integers(0, n_objects, size=n_triples) + o_base
+    triples = np.stack([s, p, o], axis=1).astype(np.int64)
+    return np.unique(triples, axis=0)
+
+
+def zipf_workload(
+    n_queries: int,
+    n_subjects: int = 512,
+    n_predicates: int = 8,
+    exponent: float = 1.4,
+    seed: int = 0,
+) -> list[Query]:
+    """Single-pattern star probes matching :func:`zipf_skew`'s layout:
+    (Const(s), Const(p), Var(o)) with s drawn from the *same* Zipf law as
+    the data — the hot hub is also the workload's hot subject, so its full
+    star capacity dominates query cost under hash placement."""
+    rng = np.random.default_rng(seed)
+    s_base = n_predicates
+    ranks = np.arange(1, n_subjects + 1, dtype=np.float64)
+    probs = ranks ** -float(exponent)
+    probs /= probs.sum()
+    subjects = rng.choice(n_subjects, size=n_queries, p=probs) + s_base
+    preds = rng.integers(0, n_predicates, size=n_queries)
+    return [
+        Query(
+            [TriplePattern(Const(int(s)), Const(int(p)), Var("o"))],
+            name="zipf_star",
+        )
+        for s, p in zip(subjects, preds)
+    ]
 
 
 def lubm_queries(d: Dictionary) -> dict[str, "QueryTemplate"]:

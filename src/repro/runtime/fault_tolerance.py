@@ -6,10 +6,13 @@ The paper's recovery story, mapped onto this framework:
                  bootstrap -> persisted once, reloaded on master restart.
   heat map / PI  reconstructed by replaying the (append-only) query log —
                  this module implements the replay.
-  worker shards  subject-hash partitioning is *stateless*: worker w owns
-                 H(s) mod W.  On worker loss the replacement re-derives its
-                 shard from the data source (or a checkpoint); on elastic
-                 resize W -> W', shards are re-derived with the new modulus
+  worker shards  hash placement is *stateless*: under the default policy
+                 worker w owns H(s) mod W (a directory placement adds only
+                 its small exception table — ``placement.fingerprint()`` —
+                 to the recoverable state).  On worker loss the replacement
+                 re-derives its shard from the data source (or a
+                 checkpoint); on elastic resize W -> W', shards are
+                 re-derived with the new modulus
                  (``rehash_assignments``).  Replica-index contents are
                  disposable (cache semantics): they are rebuilt by the IRD
                  process as queries arrive — the pay-as-you-go property

@@ -1,0 +1,291 @@
+"""Placement-layer tests (ISSUE 6 tentpole + satellites 2/3).
+
+Covers, in-process (tier 1):
+
+  * the splitmix64 dedupe (satellite 2): the numpy and jax spellings in
+    ``repro.core.placement`` and their historical re-exports
+    (``partition.hash_ids``, ``dsj.jnp_hash_ids``) are bit-identical;
+  * ``HashPlacement`` reproduces the historical ingest and owner rules
+    exactly, and an engine built with ``placement="hash"`` is bit-identical
+    to the default engine — results, comm cells, pattern-index fingerprints
+    AND the jit cache (``probe_compile_cache_size`` must not grow when the
+    explicit-hash engine replays a workload the default engine warmed);
+  * ``DirectoryPlacement`` host/device owner parity (place_triples_np vs
+    triple_dest, owner_np vs owner_dest) and the ``value_dests`` replication
+    invariants (k=0 is the base owner; exactly f(v) valid replicas);
+  * directory engines return the same answers as hash engines — sequential,
+    batched, with pre-seeded splits, and through the IRD/parallel-mode
+    lifecycle — and agree with the brute-force oracle;
+  * the engine's skew detector: a hub-star dataset triggers a rebalance
+    that halves the max/mean shard-load ratio, moves the hub's triples to
+    their split set, keeps answers identical, and (warmed) recompiles
+    nothing.
+
+The 8-real-device directory run lives in tests/test_substrate_mesh.py
+(subprocess part).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (x64 on, as in production)
+import jax.numpy as jnp
+
+from repro.core import dsj
+from repro.core.backend import probe_compile_cache_size
+from repro.core.engine import AdHashEngine
+from repro.core.partition import hash_ids, partition_by_subject
+from repro.core.placement import (
+    DirectoryPlacement,
+    HashPlacement,
+    PlacementSpec,
+    resolve_placement,
+    splitmix64_jnp,
+    splitmix64_np,
+)
+from repro.core.query import Const, Query, TriplePattern, Var
+from repro.data.synthetic_rdf import Workload, lubm_like
+
+from reference import match_query
+
+_DICT, _TRIPLES = lubm_like(n_universities=2, depts_per_univ=2,
+                            profs_per_dept=2, students_per_prof=2)
+
+
+def _run(eng, queries):
+    return [(rel.to_set(), st.comm_cells) for rel, st in
+            (eng.query(q) for q in queries)]
+
+
+# --------------------------------------------------- satellite 2: one hash
+def test_splitmix64_cross_impl_parity():
+    """All four spellings of the subject hash agree bit for bit — the
+    regression that keeps ingest (numpy) and the traced stages (jax)
+    routing every id to the same worker."""
+    ids = np.concatenate([
+        np.arange(0, 1000, dtype=np.int64),
+        np.asarray([0, 1, 2**31 - 1, 2**31, 2**62], dtype=np.int64),
+        np.random.default_rng(0).integers(0, 2**62, size=4096),
+    ])
+    ref = splitmix64_np(ids)
+    assert (ref >= 0).all()  # sign bit cleared: safe under % W
+    np.testing.assert_array_equal(ref, hash_ids(ids))
+    np.testing.assert_array_equal(ref, np.asarray(splitmix64_jnp(
+        jnp.asarray(ids))))
+    np.testing.assert_array_equal(ref, np.asarray(dsj.jnp_hash_ids(
+        jnp.asarray(ids))))
+
+
+# ------------------------------------------------ hash policy: bit parity
+def test_hash_placement_matches_historical_rules():
+    for w in (1, 3, 8):
+        plc = HashPlacement(w)
+        np.testing.assert_array_equal(
+            plc.place_triples_np(_TRIPLES), partition_by_subject(_TRIPLES, w)
+        )
+        ids = _TRIPLES[:, 0]
+        np.testing.assert_array_equal(plc.owner_np(ids), hash_ids(ids) % w)
+    assert plc.stage_spec is None and plc.device_table() is None
+    assert plc.local_join_safe and not plc.supports_split
+
+
+def test_resolve_placement():
+    assert isinstance(resolve_placement(None, 4), HashPlacement)
+    assert isinstance(resolve_placement("hash", 4), HashPlacement)
+    assert isinstance(resolve_placement("directory", 4), DirectoryPlacement)
+    plc = DirectoryPlacement(4)
+    assert resolve_placement(plc, 4) is plc
+    with pytest.raises(ValueError, match="workers"):
+        resolve_placement(plc, 8)
+    with pytest.raises(ValueError, match="unknown placement"):
+        resolve_placement("metis", 4)
+
+
+def test_hash_engine_bit_identical_and_no_new_compiles():
+    """placement='hash' is the default path *verbatim*: same answers, comm
+    cells, fingerprints — and the stages hit the very jit entries the
+    default engine compiled (zero cache growth on the replay)."""
+    wl = Workload(_DICT, seed=5)
+    qs = wl.sample(4) * 2
+    kw = dict(adaptive=True, frequency_threshold=2, capacity=256)
+    default_eng = AdHashEngine(_TRIPLES, 3, **kw)
+    r_default = _run(default_eng, qs)
+    warm = probe_compile_cache_size()
+
+    hash_eng = AdHashEngine(_TRIPLES, 3, placement="hash", **kw)
+    r_hash = _run(hash_eng, qs)
+    assert r_hash == r_default
+    assert probe_compile_cache_size() == warm, \
+        "explicit hash placement changed a jit cache key"
+    assert hash_eng.report.comm_cells == default_eng.report.comm_cells
+    assert hash_eng.report.ird_comm_cells == default_eng.report.ird_comm_cells
+    assert hash_eng.pattern_index.fingerprint() == \
+        default_eng.pattern_index.fingerprint()
+    np.testing.assert_array_equal(np.asarray(hash_eng.store.counts),
+                                  np.asarray(default_eng.store.counts))
+
+
+# ------------------------------------- directory policy: host/device parity
+def _seeded_directory(w: int = 4, n_split: int = 5) -> DirectoryPlacement:
+    plc = DirectoryPlacement(w)
+    subjects = np.unique(_TRIPLES[:, 0])[:n_split]
+    assert plc.add_splits(subjects) == list(map(int, subjects))
+    return plc
+
+
+def test_directory_host_device_owner_parity():
+    plc = _seeded_directory()
+    spec, table = plc.stage_spec, plc.device_table()
+    s = jnp.asarray(_TRIPLES[:, 0])
+    o = jnp.asarray(_TRIPLES[:, 2])
+    valid = jnp.ones(len(_TRIPLES), bool)
+
+    np.testing.assert_array_equal(
+        np.asarray(spec.triple_dest(s, o, valid, table)),
+        plc.place_triples_np(_TRIPLES),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(spec.owner_dest(s, valid, table)),
+        plc.owner_np(_TRIPLES[:, 0]),
+    )
+
+
+def test_directory_value_dests_invariants():
+    plc = _seeded_directory()
+    spec, table = plc.stage_spec, plc.device_table()
+    ids = np.unique(_TRIPLES[:, 0])
+    vals = jnp.asarray(ids)
+    valid = jnp.ones(len(ids), bool)
+    dests, dvalid = spec.value_dests(vals, valid, table)
+    dests, dvalid = np.asarray(dests), np.asarray(dvalid)
+    assert dests.shape == (plc.max_split, len(ids))
+
+    base = plc.owner_np(ids)
+    np.testing.assert_array_equal(dests[0], base)  # k=0 is the base owner
+    assert dvalid[0].all()
+    for j, s in enumerate(ids):
+        f = plc.split_factor(int(s))
+        assert dvalid[:, j].sum() == f  # exactly f(v) probe replicas
+        np.testing.assert_array_equal(
+            dests[:f, j], (base[j] + np.arange(f)) % plc.w
+        )
+    # invalid lanes stay invalid
+    _, dv0 = spec.value_dests(vals, jnp.zeros(len(ids), bool), table)
+    assert not np.asarray(dv0).any()
+
+
+def test_directory_table_growth_keeps_capacity_class():
+    plc = DirectoryPlacement(4)
+    plc.add_splits([int(np.unique(_TRIPLES[:, 0])[0])])
+    assert plc.table_capacity() == 64  # floor class
+    t0 = plc.device_table()
+    v0 = plc.version
+    plc.add_splits(np.unique(_TRIPLES[:, 0])[1:40])
+    assert plc.version > v0
+    t1 = plc.device_table()
+    assert t1.keys.shape == t0.keys.shape  # same class: no shape change
+    # duplicate registration is a no-op
+    assert plc.add_splits(np.unique(_TRIPLES[:, 0])[:3]) == []
+
+
+# ----------------------------------------- directory engines answer exactly
+def test_directory_engine_parity_and_oracle():
+    """Directory placement changes *where* triples live, never what a query
+    returns — with adaptivity + IRD active and splits pre-seeded."""
+    wl = Workload(_DICT, seed=9)
+    qs = wl.sample(5) * 2
+    kw = dict(adaptive=True, frequency_threshold=2, capacity=256)
+    hash_eng = AdHashEngine(_TRIPLES, 4, **kw)
+    dir_eng = AdHashEngine(_TRIPLES, 4, placement=_seeded_directory(4), **kw)
+
+    r_hash = [rel.to_set() for rel, _ in (hash_eng.query(q) for q in qs)]
+    r_dir = [rel.to_set() for rel, _ in (dir_eng.query(q) for q in qs)]
+    assert r_hash == r_dir
+    # the adaptive lifecycle ran on both sides
+    assert dir_eng.report.n_redistributions >= 1
+    assert dir_eng.report.n_parallel_replica >= 1
+    for q in qs[:4]:
+        rel, _ = dir_eng.query(q)
+        got = set(map(tuple, rel.project_to(q.vars)))
+        assert got == match_query(_TRIPLES, q), q.name
+
+
+def test_directory_engine_batched_parity():
+    wl = Workload(_DICT, seed=21)
+    qs = wl.sample(5) * 2
+    kw = dict(adaptive=True, frequency_threshold=2, capacity=256)
+    seq = AdHashEngine(_TRIPLES, 4, placement=_seeded_directory(4), **kw)
+    bat = AdHashEngine(_TRIPLES, 4, placement=_seeded_directory(4), **kw)
+    r_seq = [(rel.to_set(), st.comm_cells, st.mode)
+             for rel, st in (seq.query(q) for q in qs)]
+    r_bat = [(rel.to_set(), st.comm_cells, st.mode)
+             for rel, st in bat.query_batch(qs)]
+    assert r_seq == r_bat
+    assert seq.pattern_index.fingerprint() == bat.pattern_index.fingerprint()
+
+
+# --------------------------------------------- the skew detector end to end
+def _hub_triples(n_hub: int = 2400, n_cold: int = 40, deg_cold: int = 40
+                 ) -> np.ndarray:
+    """One hub subject owning ~60% of the data; all triples distinct."""
+    hub = 9
+    t = [(hub, i % 4, 1000 + i) for i in range(n_hub)]
+    for j in range(n_cold):
+        s = 10 + j
+        t += [(s, i % 4, 10_000 + j * deg_cold + i) for i in range(deg_cold)]
+    return np.asarray(t, dtype=np.int64)
+
+
+def test_rebalance_splits_hub_and_preserves_answers():
+    triples = _hub_triples()
+    queries = [
+        Query([TriplePattern(Const(s), Const(p), Var("o"))],
+              name="star")
+        for s in (9, 10, 11) for p in (0, 1)
+    ]
+    kw = dict(adaptive=True, frequency_threshold=10**9, capacity=256,
+              use_count_oracle=False)
+    hash_eng = AdHashEngine(triples, 4, **kw)
+    dir_eng = AdHashEngine(triples, 4, placement="directory", **kw)
+
+    before = dir_eng.load_balance()
+    r_hash = [rel.to_set() for rel, _ in (hash_eng.query(q) for q in queries)]
+    r_dir = [rel.to_set() for rel, _ in (dir_eng.query(q) for q in queries)]
+    assert r_hash == r_dir
+
+    # the first query's rebalance split the hub across its split set
+    assert dir_eng.report.n_rebalances >= 1
+    assert dir_eng.report.rebalance_comm_cells > 0
+    plc = dir_eng.placement
+    assert 9 in plc.entries and plc.split_factor(9) > 1
+    after = dir_eng.load_balance()
+    ratio = lambda lb: lb["max"] / max(lb["mean"], 1e-9)  # noqa: E731
+    assert ratio(after) <= ratio(before) / 2, (before, after)
+    # the moved store still matches ingesting under the mutated policy
+    np.testing.assert_array_equal(
+        np.asarray(dir_eng.store.counts),
+        np.bincount(plc.place_triples_np(triples), minlength=4),
+    )
+
+    # warmed + rebalanced: replaying the workload recompiles nothing and
+    # the answers agree with the oracle
+    for q in queries:  # second pass settles retry-discovered capacities
+        dir_eng.query(q)
+    warm = probe_compile_cache_size()
+    for q in queries:
+        rel, _ = dir_eng.query(q)
+        got = set(map(tuple, rel.project_to(q.vars)))
+        assert got == match_query(triples, q)
+    assert probe_compile_cache_size() == warm, "post-rebalance recompile"
+    assert dir_eng.report.n_rebalances == 1  # detector settled, no thrash
+
+
+def test_hash_engine_never_rebalances():
+    eng = AdHashEngine(_hub_triples(), 4, adaptive=True,
+                       frequency_threshold=10**9, capacity=256,
+                       use_count_oracle=False)
+    q = Query([TriplePattern(Const(9), Const(0), Var("o"))], name="star")
+    eng.query(q)
+    assert eng.report.n_rebalances == 0
+    assert eng.placement.fingerprint() == ("hash", 4)
