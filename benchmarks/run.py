@@ -32,6 +32,7 @@ def _benches(fast: bool):
         bench_partition,
         bench_probe,
         bench_queries,
+        bench_recovery,
         bench_relalg,
         bench_startup,
     )
@@ -46,6 +47,8 @@ def _benches(fast: bool):
             bench_queries.run_sharded,
             bench_adaptivity.run_parallel_mode_sharded,
             bench_balance.run_skew_sharded,  # Zipf skew: hash vs directory
+            bench_recovery.run_recovery_sharded,  # ISSUE 7: worker loss +
+            #                                       master-restart recovery
         )
     return (
         bench_partition.run,
@@ -63,6 +66,7 @@ def _benches(fast: bool):
         bench_balance.run,
         bench_balance.run_skew,  # in-process Zipf skew, hash vs directory
         bench_balance.run_skew_sharded,  # same on the 8-device mesh
+        bench_recovery.run_recovery_sharded,  # degraded-mesh + recovery cost
     )
 
 

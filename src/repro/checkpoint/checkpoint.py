@@ -1,6 +1,6 @@
 """Sharded, atomic, async-capable checkpointing with elastic restore.
 
-Design (DESIGN §6, paper §3.1 "Failure Recovery"):
+Design (DESIGN §9, paper §3.1 "Failure Recovery"):
   * one .npz per pytree (params / opt m / opt v) + a JSON manifest,
   * writes go to a temp directory, fsynced, then ``os.replace``-d into place
     (atomic on POSIX) — a crash mid-save never corrupts the latest step,
@@ -8,9 +8,18 @@ Design (DESIGN §6, paper §3.1 "Failure Recovery"):
   * restore is *elastic*: arrays are re-placed under the CURRENT mesh's
     shardings regardless of the mesh they were saved from (subject-hash
     re-hash mod W -> mod W' is the same property the paper exploits),
-  * the AdHash engine side checkpoints its master state (dictionary, stats,
-    heat map counts) via ``save_engine_state`` — the PI is reconstructed by
-    replaying the query log, exactly as §3.1 prescribes.
+  * the AdHash engine side checkpoints its master state via
+    ``save_engine_state``: dictionary + statistics (read-only, saved once),
+    the placement table, and the **append-only** query log the PI replay
+    needs (offset-tracked — a mid-workload save appends only the new
+    suffix, never truncates),
+  * ``save_adaptivity`` / ``restore_adaptivity`` snapshot the *full*
+    adaptivity state (heat map, pattern-index structure + LRU clock,
+    replica module contents, placement table, tuned kernel tables) in one
+    atomically-published directory.  Restore onto the same W is
+    bit-identical; onto a different W the replica state is dropped and the
+    query log replays from the start — the paper's pay-as-you-go recovery —
+    while the placement table re-derives base shards under the new modulus.
 """
 from __future__ import annotations
 
@@ -26,6 +35,14 @@ import jax
 import numpy as np
 
 __all__ = ["CheckpointManager"]
+
+
+def _atomic_publish(src, dst) -> None:
+    """The atomic-rename chokepoint (``os.replace``).  Module-level so the
+    fault-injection harness (``repro.runtime.fault_injection``) can crash a
+    save *between* writing the data and publishing it — the scenario the
+    atomicity claim is about."""
+    os.replace(src, dst)
 
 
 def _flatten_with_names(tree: Any) -> dict[str, np.ndarray]:
@@ -61,6 +78,10 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         self._thread: threading.Thread | None = None
+        # lines already persisted to query_log.jsonl (append-only offset);
+        # lazily initialized from the file so a restarted master keeps
+        # appending where the crashed one stopped
+        self._log_persisted: int | None = None
 
     # ------------------------------------------------------------------ save
     def save(self, params: Any, opt_state: Any, step: int,
@@ -103,7 +124,7 @@ class CheckpointManager:
             os.fsync(f.fileno())
         if final.exists():
             shutil.rmtree(final)
-        os.replace(tmp, final)  # atomic publish
+        _atomic_publish(tmp, final)
         self._gc()
 
     def _gc(self) -> None:
@@ -139,18 +160,191 @@ class CheckpointManager:
         return params, opt, step
 
     # --------------------------------------- AdHash master state (paper §3.1)
-    def save_engine_state(self, engine, query_log: list[str]) -> None:
-        """Master recovery state: dictionary + statistics are read-only and
-        saved once; the heat map / PI are recovered by replaying the query
-        log (paper §3.1), which we persist append-only."""
+    def save_engine_state(self, engine, query_log: list) -> None:
+        """Master recovery state (DESIGN §9): dictionary + statistics are
+        read-only and saved once; the placement table is snapshotted on
+        every call (it grows as the rebalancer splits hot keys); the query
+        log — what the heat map / PI replay needs — is persisted
+        **append-only** with offset tracking: ``query_log`` is the full
+        in-memory log, and only the suffix beyond what is already on disk
+        is written (then fsynced)."""
         if engine.dictionary is not None:
             engine.dictionary.save(str(self.dir / "dictionary.json"))
-        with open(self.dir / "query_log.jsonl", "w") as f:
-            for q in query_log:
-                f.write(json.dumps(q) + "\n")
+        self.save_placement(engine.placement)
+        from repro.core.query import Query
+
+        n = self._log_lines_on_disk()
+        if len(query_log) < n:
+            raise ValueError(
+                f"query log shrank: {len(query_log)} entries passed but "
+                f"{n} already persisted — the log is append-only"
+            )
+        if len(query_log) == n:
+            return
+        with open(self.dir / "query_log.jsonl", "a") as f:
+            for q in query_log[n:]:
+                payload = q.to_json() if isinstance(q, Query) else q
+                f.write(json.dumps(payload) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        self._log_persisted = len(query_log)
+
+    def _log_lines_on_disk(self) -> int:
+        if self._log_persisted is None:
+            p = self.dir / "query_log.jsonl"
+            self._log_persisted = (
+                sum(1 for _ in p.open()) if p.exists() else 0
+            )
+        return self._log_persisted
 
     def load_query_log(self) -> list:
+        """The persisted query log, as ``Query`` objects (raw entries from
+        pre-serialization logs pass through unchanged)."""
+        from repro.core.query import Query
+
         p = self.dir / "query_log.jsonl"
         if not p.exists():
             return []
-        return [json.loads(line) for line in p.read_text().splitlines()]
+        out = []
+        for line in p.read_text().splitlines():
+            d = json.loads(line)
+            out.append(
+                Query.from_json(d)
+                if isinstance(d, dict) and "patterns" in d else d
+            )
+        return out
+
+    # ---------------------------------------------------- placement snapshot
+    def save_placement(self, placement) -> None:
+        """Atomically persist the placement table (DESIGN §9: part of the
+        master's recoverable state — under a directory policy the exception
+        table is what makes the restored store layout match)."""
+        from repro.core.placement import placement_state
+
+        tmp = self.dir / ".tmp_placement.json"
+        with open(tmp, "w") as f:
+            json.dump(placement_state(placement), f)
+            f.flush()
+            os.fsync(f.fileno())
+        _atomic_publish(tmp, self.dir / "placement.json")
+
+    def load_placement(self, n_workers: int | None = None):
+        """Rebuild the persisted placement policy (or None when no snapshot
+        exists).  ``n_workers`` re-derives base shards for an elastic
+        restore onto a different W."""
+        from repro.core.placement import placement_from_state
+
+        p = self.dir / "placement.json"
+        if not p.exists():
+            return None
+        return placement_from_state(json.loads(p.read_text()), n_workers)
+
+    # ------------------------------------- full adaptivity snapshot (ISSUE 7)
+    def save_adaptivity(self, engine, step: int) -> None:
+        """Snapshot the engine's *entire* adaptivity state in one atomically
+        published directory: heat map (counts, Boyer-Moore metadata, clock),
+        pattern-index structure (specializations, storage ids, LRU
+        timestamps, clock), every replica module's device arrays, the
+        placement table, and the tuned kernel table for this platform.
+
+        The manifest records how many query-log lines the snapshot covers
+        (``n_queries_logged``), so a restore replays only the suffix."""
+        from repro.core.placement import placement_state
+        from repro.kernels.tuning import tuned_table
+
+        tmp = self.dir / f".tmp_adaptivity{step}"
+        final = self.dir / f"adaptivity{step:010d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+
+        arrays: dict[str, np.ndarray] = {}
+        modules = {}
+        for sid, st in engine.replicas.modules.items():
+            leaves, n_ids = st.tree_flatten()
+            names = ("spo_ps", "keys_ps", "spo_po", "keys_po", "counts")
+            for name, leaf in zip(names, leaves):
+                arrays[f"{sid}/{name}"] = np.asarray(leaf)
+            modules[sid] = {"n_ids": int(n_ids)}
+        np.savez(tmp / "replicas.npz", **arrays)
+
+        # tuned kernel table, in the loader's own on-disk format: a restored
+        # master runs with it by pointing ADHASH_TUNED_DIR at <snapshot>/tuned
+        platform = jax.default_backend()
+        tuned_dir = tmp / "tuned"
+        tuned_dir.mkdir()
+        (tuned_dir / f"{platform}.json").write_text(json.dumps(
+            {"platform": platform, "kernels": tuned_table()}, indent=2,
+            sort_keys=True,
+        ) + "\n")
+
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "format": 1,
+            "n_workers": engine.w,
+            "n_queries_logged": self._log_lines_on_disk(),
+            "heatmap": engine.heatmap.to_state(),
+            "pattern_index": engine.pattern_index.to_state(),
+            "placement": placement_state(engine.placement),
+            "replica_modules": modules,
+            "replica_next_id": engine.replicas.next_id_n,
+            "tuned": {platform: tuned_table()},
+        }
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        _atomic_publish(tmp, final)
+        # keep only the newest adaptivity snapshot (same policy as _gc)
+        for old in sorted(self.dir.glob("adaptivity*"))[:-1]:
+            shutil.rmtree(old, ignore_errors=True)
+
+    def load_adaptivity(self) -> dict | None:
+        """The newest adaptivity snapshot's manifest, or None."""
+        snaps = sorted(self.dir.glob("adaptivity*"))
+        if not snaps:
+            return None
+        manifest = json.loads((snaps[-1] / "manifest.json").read_text())
+        manifest["_dir"] = str(snaps[-1])
+        return manifest
+
+    def restore_adaptivity(self, engine) -> int:
+        """Restore the newest adaptivity snapshot into ``engine``; returns
+        the query-log offset already covered by the restored state (the
+        caller replays ``log[offset:]``).
+
+        Same W: full bit-identical restore — heat map, PI (with LRU clock),
+        replica modules placed through the engine's substrate.  Different W
+        (elastic): the worker-indexed state (PI + replica modules) is
+        dropped and offset 0 is returned — replaying the whole log rebuilds
+        them on the new W, the paper's pay-as-you-go recovery.  The tuned
+        kernel table travels in the snapshot; point ``ADHASH_TUNED_DIR`` at
+        ``<snapshot>/tuned`` to run a restored master with it."""
+        from repro.core.heatmap import HeatMap
+        from repro.core.pattern_index import PatternIndex
+        from repro.core.triples import ShardedTripleStore
+
+        manifest = self.load_adaptivity()
+        if manifest is None:
+            return 0
+        if int(manifest["n_workers"]) != engine.w:
+            return 0  # elastic restore: replay rebuilds heat map + PI
+        engine.heatmap = HeatMap.from_state(manifest["heatmap"])
+        engine.pattern_index = PatternIndex.from_state(
+            manifest["pattern_index"]
+        )
+        engine.replicas.next_id_n = int(manifest["replica_next_id"])
+        snap_dir = Path(manifest["_dir"])
+        with np.load(snap_dir / "replicas.npz") as z:
+            for sid, meta in manifest["replica_modules"].items():
+                store = ShardedTripleStore.tree_unflatten(
+                    int(meta["n_ids"]),
+                    tuple(z[f"{sid}/{name}"] for name in
+                          ("spo_ps", "keys_ps", "spo_po", "keys_po",
+                           "counts")),
+                )
+                engine.replicas.put(sid, engine.substrate.shard_store(store))
+        return int(manifest["n_queries_logged"])

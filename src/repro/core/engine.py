@@ -25,6 +25,7 @@ from .backend import quantize_capacity
 from .batcher import WorkloadBatcher
 from .dictionary import Dictionary
 from .executor import Executor, ExecutorError, QueryStats
+from .health import HealthState
 from .heatmap import HeatMap
 from .ird import IncrementalRedistributor, IRDStats
 from .pattern_index import ParallelExecutor, PatternIndex, ReplicaIndex
@@ -54,6 +55,7 @@ class EngineReport:
     n_evictions: int = 0
     n_rebalances: int = 0  # hot-key splits published (directory placement)
     rebalance_comm_cells: int = 0  # main-store cells moved by rebalances
+    n_degraded: int = 0  # PI hits demoted to the distributed route (DESIGN §9)
     n_batch_dispatches: int = 0  # batched-pipeline launches (query_batch)
     wall_time_s: float = 0.0
     history: list[tuple[str, int, float]] = field(default_factory=list)
@@ -172,6 +174,10 @@ class AdHashEngine:
             placement=self.placement,
         )
         self._no_redistribute: set = set()
+        # worker health: while any shard is failed, PI hits are demoted from
+        # the shard-local route to the distributed route and adaptivity
+        # writes are suspended (DESIGN §9)
+        self.health = HealthState(n_workers)
         self.report = EngineReport()
         self.startup_time_s = time.perf_counter() - t0
 
@@ -209,9 +215,14 @@ class AdHashEngine:
             if self.adaptive else None
         )
 
-        # (2) pattern-index hit -> parallel mode over replicas
+        # (2) pattern-index hit -> parallel mode over replicas.  While a
+        # shard is failed the hit is *demoted*: replica modules would be
+        # probed shard-locally — including on the dead shard — so the query
+        # runs the distributed route over the main index instead, exact but
+        # with communication (DESIGN §9).
         matches = self.pattern_index.match(tree) if self.adaptive else None
-        if matches is not None:
+        degraded = matches is not None and self.health.degraded
+        if matches is not None and not degraded:
             rel, qstats = self.parallel_exec.execute(
                 tree, matches, self.capacity
             )
@@ -222,6 +233,9 @@ class AdHashEngine:
                 q, plan.ordering, plan.join_vars,
                 capacity=max(self.capacity, plan.capacity_hint()),
             )
+            if degraded:
+                qstats.route = f"{self.substrate.name}-degraded"
+                self.report.n_degraded += 1
             if qstats.mode == "parallel":
                 self.report.n_parallel += 1
             else:
@@ -229,9 +243,7 @@ class AdHashEngine:
 
         # (5) adaptivity: monitor + IRD + hot-key rebalancing
         if self.adaptive:
-            self.heatmap.insert(tree)
-            self._maybe_redistribute()
-            self._maybe_rebalance()
+            self._post_query_adaptivity(tree)
 
         dt = time.perf_counter() - t0
         self.report.n_queries += 1
@@ -318,26 +330,31 @@ class AdHashEngine:
                     deferred_errors.append(e)
 
         # ---- pass 1: adaptivity control, replica-mode execution, bucketing
+        demoted: list[int] = []  # PI hits deferred to the distributed route
         for i, q in enumerate(queries):
             tree = (
                 build_redistribution_tree(q, self.stats, self.heuristic)
                 if self.adaptive else None
             )
             matches = self.pattern_index.match(tree) if self.adaptive else None
-            if matches is not None:
+            if matches is not None and not self.health.degraded:
                 t0 = time.perf_counter()
                 rel, qstats = self.parallel_exec.execute(
                     tree, matches, self.capacity
                 )
                 results[i] = (rel, qstats, time.perf_counter() - t0)
             else:
+                if matches is not None:
+                    # degraded demotion (DESIGN §9): the PI hit joins the
+                    # shape buckets like any distributed query — it only
+                    # reads the immutable main index — and its stats are
+                    # route-tagged after execution
+                    demoted.append(i)
                 plan = self.planner.plan(q)
                 batcher.add(i, q, plan.ordering, plan.join_vars,
                             max(self.capacity, plan.capacity_hint()))
             if self.adaptive:
-                self.heatmap.insert(tree)
-                self._maybe_redistribute(overlap=overlap)
-                self._maybe_rebalance(overlap=overlap)
+                self._post_query_adaptivity(tree, overlap=overlap)
 
         # the adaptivity control pass is complete for the whole workload;
         # now surface any failure an overlapped bucket hit (no results or
@@ -348,6 +365,13 @@ class AdHashEngine:
         # ---- pass 2: one dispatch per remaining shape bucket
         for bucket in batcher.buckets():
             self._execute_bucket(bucket, results)
+
+        # route-tag the demoted PI hits (each bucket member carries its own
+        # QueryStats instance, so the tag never leaks to healthy queries)
+        for i in demoted:
+            assert results[i] is not None
+            results[i][1].route = f"{self.substrate.name}-degraded"
+            self.report.n_degraded += 1
 
         # ---- workload report, in original query order
         out: list[tuple[Relation, QueryStats]] = []
@@ -398,6 +422,39 @@ class AdHashEngine:
         return rel, qstats
 
     # ------------------------------------------------------------- adaptivity
+    def observe(self, q: Query) -> None:
+        """Feed one query through the adaptivity state machine *without*
+        executing it — the replay path of the paper's §3.1 recovery story
+        (``repro.runtime.fault_tolerance.replay_query_log``).
+
+        Performs exactly the adaptivity side effects of :meth:`query` in the
+        same order: the pattern-index containment check (whose LRU touch
+        ticks the PI clock on a hit, just like a live query), then the
+        shared post-query hook (heat-map insert -> IRD -> rebalancing).  A
+        replayed workload therefore reproduces heat-map state, PI
+        fingerprints (structure, storage ids, LRU timestamps), placement
+        splits and replica footprints bit-identically."""
+        if not self.adaptive:
+            return
+        tree = build_redistribution_tree(q, self.stats, self.heuristic)
+        self.pattern_index.match(tree)  # LRU touch, as in query()
+        self._post_query_adaptivity(tree)
+
+    def _post_query_adaptivity(self, tree, overlap=None) -> None:
+        """The single post-query adaptivity hook: heat-map insert, then IRD,
+        then hot-key rebalancing.  ``query``, ``query_batch`` and the
+        recovery replay all come through here — one code path, one state
+        machine.  While the mesh is degraded the monitor keeps counting but
+        redistribution and rebalancing are suspended: both would place
+        replica rows onto the failed shard (DESIGN §9); they resume — and
+        catch up from the accumulated heat-map counts — once the shard
+        recovers."""
+        self.heatmap.insert(tree)
+        if self.health.degraded:
+            return
+        self._maybe_redistribute(overlap=overlap)
+        self._maybe_rebalance(overlap=overlap)
+
     def _maybe_redistribute(self, overlap=None) -> None:
         """Trigger IRD for newly hot patterns.
 
@@ -412,8 +469,8 @@ class AdHashEngine:
             key = tuple(sorted(map(tuple, hot.edge_paths)))
             if key in self._no_redistribute:
                 continue
-            if self.pattern_index.match(hot.rtree) is not None:
-                continue  # already redistributed
+            if self.pattern_index.contains(hot.rtree):
+                continue  # already redistributed (peek: no LRU touch)
             pending = self.ird.redistribute_deferred(hot)
             try:
                 if overlap is not None:
@@ -434,7 +491,7 @@ class AdHashEngine:
                 # pattern too large for the budget even alone: don't thrash
                 if (
                     self.budget is not None
-                    and self.pattern_index.match(hot.rtree) is None
+                    and not self.pattern_index.contains(hot.rtree)
                 ):
                     self._no_redistribute.add(key)
 

@@ -124,6 +124,88 @@ class HeatMap:
         elif is_root:
             self.root_var_seen += 1
 
+    # --------------------------------------------------------- checkpointing
+    # The heat map is part of the master's recoverable adaptivity state
+    # (DESIGN §9): a snapshot captures every edge count, LRU timestamp and
+    # Boyer-Moore verification counter so a restored map is bit-equivalent —
+    # hot-pattern detection resumes exactly where the crashed master stopped.
+    @staticmethod
+    def _bm_state(bm: BoyerMoore) -> dict:
+        return {
+            "candidate": bm.candidate,
+            "count": bm.count,
+            "freq": sorted((int(k), int(v)) for k, v in bm.freq.items()),
+            "total": bm.total,
+        }
+
+    @staticmethod
+    def _bm_from(state: dict) -> BoyerMoore:
+        bm = BoyerMoore()
+        bm.candidate = state["candidate"]
+        bm.count = state["count"]
+        bm.freq = Counter(dict(
+            (int(k), int(v)) for k, v in state["freq"]
+        ))
+        bm.total = state["total"]
+        return bm
+
+    def to_state(self) -> dict:
+        """JSON-serializable snapshot of the full map (clock included)."""
+
+        def rec(table: dict[EdgeKey, HeatEdge]) -> list[dict]:
+            return [
+                {
+                    "pred": k.pred,
+                    "pis": k.parent_is_subject,
+                    "count": he.count,
+                    "last_ts": he.last_ts,
+                    "meta": self._bm_state(he.child_meta),
+                    "var_seen": he.child_var_seen,
+                    "children": rec(he.children),
+                }
+                for k, he in he_sorted(table)
+            ]
+
+        def he_sorted(table):
+            return sorted(table.items(),
+                          key=lambda kv: (kv[0].pred, kv[0].parent_is_subject))
+
+        max_ts = [0]
+
+        def scan(table):
+            for he in table.values():
+                max_ts[0] = max(max_ts[0], he.last_ts)
+                scan(he.children)
+
+        scan(self.children)
+        return {
+            "root_meta": self._bm_state(self.root_meta),
+            "root_var_seen": self.root_var_seen,
+            "clock": max_ts[0] + 1,  # only insert() ticks -> max ts is last
+            "children": rec(self.children),
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "HeatMap":
+        hm = cls()
+        hm.root_meta = cls._bm_from(state["root_meta"])
+        hm.root_var_seen = state["root_var_seen"]
+        hm._clock = itertools.count(state["clock"])
+
+        def rec(entries: list[dict], table: dict[EdgeKey, HeatEdge]) -> None:
+            for e in entries:
+                k = EdgeKey(e["pred"], e["pis"])
+                he = HeatEdge(
+                    k, count=e["count"], last_ts=e["last_ts"],
+                    child_meta=cls._bm_from(e["meta"]),
+                    child_var_seen=e["var_seen"],
+                )
+                table[k] = he
+                rec(e["children"], he.children)
+
+        rec(state["children"], hm.children)
+        return hm
+
     # ----------------------------------------------------- vertex frequency
     def vertex_frequencies(self) -> Counter:
         """Aggregate constant-vertex access counts across the whole map.

@@ -114,6 +114,24 @@ class PatternIndex:
                 return out
         return None
 
+    def contains(self, tree: RTree) -> bool:
+        """Non-ticking containment peek: the same check as :meth:`match`
+        but without the LRU touch.  The IRD trigger uses it to ask "already
+        redistributed?" — a bookkeeping probe, not a query serving from the
+        replicas, so it must not refresh recency.  (It also keeps the
+        query-log replay clock-exact: the trigger runs on healthy queries
+        but is suspended while degraded, and a ticking probe would make the
+        two histories diverge in LRU timestamps.)"""
+        root_specs: list[int | None] = [None]
+        if isinstance(tree.root.term, Const):
+            root_specs.insert(0, tree.root.term.id)
+        out: list[tuple[TreeEdge, PIEdge]] = []
+        return any(
+            self._match_level(tree.root, self.roots[spec], out)
+            for spec in root_specs
+            if spec in self.roots
+        )
+
     def _match_level(self, node: TreeNode, tbl: dict, out: list) -> bool:
         for e in node.children:
             k = self._key_of(e)
@@ -186,6 +204,74 @@ class PatternIndex:
             for rspec, tbl in self.roots.items()
         ))
 
+    # --------------------------------------------------------- checkpointing
+    # The PI structure (edges, constant specializations, replica storage ids,
+    # LRU timestamps, clock) is part of the master's recoverable adaptivity
+    # state (DESIGN §9).  The replica module *contents* are checkpointed
+    # separately (CheckpointManager.save_adaptivity) — this is structure only.
+    def to_state(self) -> dict:
+        """JSON-serializable snapshot (clock included)."""
+
+        def rec(tbl: dict) -> list[dict]:
+            return [
+                {
+                    "pred": pie.key.pred,
+                    "pis": pie.key.parent_is_subject,
+                    "child_const": ck,
+                    "storage_id": pie.storage_id,
+                    "last_ts": pie.last_ts,
+                    "children": rec(pie.children),
+                }
+                for (_k, ck), pie in sorted(
+                    tbl.items(),
+                    key=lambda kv: (kv[0][0].pred,
+                                    kv[0][0].parent_is_subject,
+                                    -1 if kv[0][1] is None else kv[0][1]),
+                )
+            ]
+
+        max_ts = [0]
+
+        def scan(tbl):
+            for pie in tbl.values():
+                max_ts[0] = max(max_ts[0], pie.last_ts)
+                scan(pie.children)
+
+        for tbl in self.roots.values():
+            scan(tbl)
+        return {
+            # insert() and match() both stamp last_ts with the fresh tick,
+            # so the max timestamp is always the last clock value handed out
+            "clock": max_ts[0] + 1,
+            "roots": [
+                {"root_const": rspec, "edges": rec(tbl)}
+                for rspec, tbl in sorted(
+                    self.roots.items(),
+                    key=lambda kv: -1 if kv[0] is None else kv[0],
+                )
+            ],
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "PatternIndex":
+        pi = cls()
+        pi._clock = itertools.count(state["clock"])
+
+        def rec(entries: list[dict], tbl: dict) -> None:
+            for e in entries:
+                ck = e["child_const"]
+                ck = None if ck is None else int(ck)
+                pie = PIEdge(EdgeKey(e["pred"], e["pis"]), ck,
+                             e["storage_id"], last_ts=e["last_ts"])
+                tbl[(pie.key, ck)] = pie
+                rec(e["children"], pie.children)
+
+        for r in state["roots"]:
+            rc = r["root_const"]
+            rc = None if rc is None else int(rc)
+            rec(r["edges"], pi.roots.setdefault(rc, {}))
+        return pi
+
 
 class ReplicaIndex:
     """Worker-side replica storage: one ShardedTripleStore per PI edge."""
@@ -193,10 +279,15 @@ class ReplicaIndex:
     def __init__(self, n_workers: int) -> None:
         self.w = n_workers
         self.modules: dict[str, ShardedTripleStore] = {}
-        self._ids = itertools.count()
+        # plain int, not itertools.count: checkpoint restore must set the
+        # next id without consuming it ("rep3" reissued over a restored
+        # module of the same name would silently clobber it)
+        self.next_id_n = 0
 
     def new_id(self) -> str:
-        return f"rep{next(self._ids)}"
+        sid = f"rep{self.next_id_n}"
+        self.next_id_n += 1
+        return sid
 
     def put(self, sid: str, store: ShardedTripleStore) -> None:
         self.modules[sid] = store

@@ -64,6 +64,8 @@ __all__ = [
     "HashPlacement",
     "DirectoryPlacement",
     "resolve_placement",
+    "placement_state",
+    "placement_from_state",
 ]
 
 I64MAX = np.iinfo(np.int64).max
@@ -390,6 +392,44 @@ class DirectoryPlacement(PlacementPolicy):
     def fingerprint(self) -> tuple:
         return ("directory", self.w, self.max_split,
                 tuple(sorted(self.entries.items())))
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing (DESIGN §9): the placement table is part of the master's
+# recoverable state — fault_tolerance.py names placement.fingerprint() as
+# what a restarted master must reproduce.
+# ---------------------------------------------------------------------------
+def placement_state(plc: PlacementPolicy) -> dict:
+    """JSON-serializable snapshot of a policy (fingerprint included, so a
+    restore can be verified against the saved state)."""
+    st: dict = {"kind": plc.name, "n_workers": plc.w,
+                "fingerprint": repr(plc.fingerprint())}
+    if isinstance(plc, DirectoryPlacement):
+        st["max_split"] = plc.max_split
+        st["entries"] = [[int(s), int(b), int(lf)]
+                         for s, (b, lf) in sorted(plc.entries.items())]
+    return st
+
+
+def placement_from_state(state: dict, n_workers: int | None = None
+                         ) -> PlacementPolicy:
+    """Rebuild a policy from :func:`placement_state`.
+
+    Elastic restore: with ``n_workers`` different from the saved W, base
+    shards are recomputed under the new modulus (``add_splits`` re-derives
+    them from the hash — the same property ``rehash_assignments`` measures)
+    and split factors are clamped to the new policy maximum.  On the same W
+    the restored fingerprint is identical to the saved one."""
+    w = int(n_workers if n_workers is not None else state["n_workers"])
+    if state["kind"] == "hash":
+        return HashPlacement(w)
+    if state["kind"] != "directory":
+        raise ValueError(f"unknown placement kind {state['kind']!r}")
+    plc = DirectoryPlacement(w, max_split=min(int(state["max_split"]), w))
+    max_logf = plc.max_split.bit_length() - 1
+    for s, _base, logf in state.get("entries", []):
+        plc.add_splits([int(s)], logf=min(int(logf), max_logf))
+    return plc
 
 
 def resolve_placement(placement, n_workers: int) -> PlacementPolicy:

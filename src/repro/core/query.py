@@ -161,3 +161,29 @@ class Query:
     def edges(self) -> list[tuple[Term, Term, Term, int]]:
         """(subject, predicate, object, pattern_idx) edges of the query graph."""
         return [(q.s, q.p, q.o, i) for i, q in enumerate(self.patterns)]
+
+    # ---------------------------------------------------------- serialization
+    # The master's query log (paper §3.1) is persisted as JSONL so a restarted
+    # master can replay it; terms encode as {"v": name} / {"c": id}.
+    def to_json(self) -> dict:
+        def term(t: Term):
+            return {"v": t.name} if isinstance(t, Var) else {"c": t.id}
+
+        return {
+            "name": self.name,
+            "capacity": self.capacity,
+            "patterns": [[term(q.s), term(q.p), term(q.o)]
+                         for q in self.patterns],
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Query":
+        def term(t: dict) -> Term:
+            return Var(t["v"]) if "v" in t else Const(int(t["c"]))
+
+        return cls(
+            patterns=[TriplePattern(*(term(t) for t in p))
+                      for p in d["patterns"]],
+            name=d.get("name", ""),
+            capacity=int(d.get("capacity", 4096)),
+        )

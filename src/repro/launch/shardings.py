@@ -1,6 +1,6 @@
 """Sharding rules: parameter, optimizer, batch and cache PartitionSpecs.
 
-Rules are name/path based over the parameter pytree (DESIGN §6):
+Rules are name/path based over the parameter pytree:
 
   vocab tables      ('model', None)        row (vocab) sharded
   LM head           (None, 'model')
@@ -89,7 +89,7 @@ def _spec_for(path, leaf, sizes: dict) -> P:
                 return P(*([None] * (nd - len(tail)) + list(tail)))
         return P(*([None] * nd))
 
-    if in_ssm:  # SSM mixers replicated (DP-only family, DESIGN §6)
+    if in_ssm:  # SSM mixers replicated (DP-only family)
         return P(*([None] * nd))
     if name in _REPLICATED or any(n in _REPLICATED for n in names):
         return P(*([None] * nd))

@@ -1,4 +1,4 @@
-"""Gradient compression for the cross-pod all-reduce (DESIGN §6).
+"""Gradient compression for the cross-pod all-reduce.
 
 int8 stochastic-free linear quantization with **error feedback** (the
 residual of each step is added back before the next quantization), applied

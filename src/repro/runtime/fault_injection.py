@@ -1,0 +1,123 @@
+"""Deterministic fault injection for the recovery test/benchmark harness
+(DESIGN §9).
+
+Three failure modes from the acceptance checklist, all driven by a virtual
+clock so tests never sleep:
+
+  worker loss     :class:`FaultInjector` kills a shard's heartbeats and
+                  advances time past the detector deadline; the engine's
+                  ``HealthState`` flips to DEGRADED and PI hits demote to
+                  the distributed route.  ``restart`` re-registers the
+                  worker and the engine returns to the shard-local route.
+  master loss     simulated by simply dropping the engine object and
+                  running ``recover_master`` against the checkpoint
+                  directory (nothing to inject — the master is the test
+                  process).
+  crash mid-save  :func:`crash_before_publish` swaps the checkpoint
+                  module's atomic-rename chokepoint for a raiser, so a
+                  save dies *after* writing its temp data but *before*
+                  publishing — the window where a non-atomic design would
+                  corrupt the previous snapshot.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+from repro.checkpoint import checkpoint as _ckpt_mod
+from repro.core.engine import AdHashEngine
+from .fault_tolerance import HeartbeatMonitor
+
+__all__ = ["CheckpointCrash", "crash_before_publish", "FaultInjector",
+           "run_with_failure"]
+
+
+class CheckpointCrash(RuntimeError):
+    """Injected crash between writing checkpoint data and publishing it."""
+
+
+@contextmanager
+def crash_before_publish():
+    """Make the next atomic publish raise instead of renaming.
+
+    Patches ``repro.checkpoint.checkpoint._atomic_publish`` — the single
+    chokepoint every checkpoint write goes through — so the temp file/dir
+    exists but the published name never appears.  ``restore_latest`` /
+    ``load_adaptivity`` must still see the previous intact snapshot."""
+    real = _ckpt_mod._atomic_publish
+
+    def boom(src, dst):
+        raise CheckpointCrash(f"injected crash before publishing {dst}")
+
+    _ckpt_mod._atomic_publish = boom
+    try:
+        yield
+    finally:
+        _ckpt_mod._atomic_publish = real
+
+
+@dataclass
+class FaultInjector:
+    """Virtual-clock failure driver around an engine + heartbeat monitor.
+
+    ``tick`` advances the clock, beats every live worker and syncs the
+    engine's health state — the one place the HEALTHY/DEGRADED transition
+    happens, so tests and benches exercise the production path rather than
+    poking ``health.mark_failed`` directly."""
+
+    engine: AdHashEngine
+    monitor: HeartbeatMonitor
+    now: float = 0.0
+    dead: set[int] = field(default_factory=set)
+
+    def tick(self, dt: float = 1.0) -> bool:
+        """Advance time; returns True if the health state changed."""
+        self.now += dt
+        for w in range(self.engine.w):
+            if w not in self.dead:
+                self.monitor.beat(w, now=self.now)
+        return self.engine.health.sync(self.monitor, now=self.now)
+
+    def kill(self, worker: int) -> None:
+        """Stop a worker's heartbeats (detector declares it failed once the
+        timeout elapses — call ``tick`` past the deadline)."""
+        self.dead.add(worker)
+
+    def restart(self, worker: int) -> None:
+        """Bring a worker back: re-register with the monitor and sync, so
+        the engine leaves degraded mode immediately."""
+        self.dead.discard(worker)
+        self.monitor.register(worker, now=self.now)
+        self.engine.health.sync(self.monitor, now=self.now)
+
+
+def run_with_failure(
+    engine: AdHashEngine,
+    queries,
+    kill_at: int,
+    worker: int,
+    recover_at: int | None = None,
+    timeout_s: float = 5.0,
+):
+    """Run a workload, killing ``worker`` just before query ``kill_at`` and
+    (optionally) restarting it just before ``recover_at``.
+
+    Returns ``(results, routes)`` — per-query relations and the route each
+    answer took, so callers can assert the healthy/degraded/recovered
+    sequence and compare answers bit-for-bit against an uninterrupted
+    twin."""
+    monitor = HeartbeatMonitor(engine.w, timeout_s=timeout_s, now=0.0)
+    inj = FaultInjector(engine, monitor)
+    results, routes = [], []
+    for i, q in enumerate(queries):
+        if i == kill_at:
+            inj.kill(worker)
+            inj.tick(2 * timeout_s)  # cross the detector deadline
+        elif recover_at is not None and i == recover_at:
+            inj.restart(worker)
+        else:
+            inj.tick(0.5)
+        rel, st = engine.query(q)
+        results.append(rel)
+        routes.append(st.route)
+    return results, routes
