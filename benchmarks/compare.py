@@ -10,7 +10,10 @@ Both files are the ``--json`` output of ``benchmarks/run.py`` (row name ->
 *both* files:
 
   * a throughput metric (name ending in ``_qps`` or ``_x``) drops by more
-    than the tolerance (default 15%) relative to the baseline, or
+    than the tolerance (default 15%) relative to the baseline — except
+    lower-is-better ratios (``_x`` rows containing ``shed``, the serving
+    bench's shed fractions), which gate on an *increase* past the same
+    tolerance instead (more shedding = more broken promises), or
   * a recompile counter *increases* at all — either a row named after one
     (name containing ``recompile``) or a post-warmup compile count embedded
     in a row's derived text (``new_compiles=N`` /
@@ -82,6 +85,12 @@ def _is_ratio(name: str) -> bool:
     return name.endswith("_x")
 
 
+def _is_lower_better(name: str) -> bool:
+    """Ratio rows where *up* is the regression (shed fractions from the
+    serving bench: more shedding means the server keeps fewer promises)."""
+    return _is_ratio(name) and "shed" in name
+
+
 def compare(baseline: dict, current: dict, qps_tolerance: float = 0.15,
             normalize: bool = True) -> tuple[list[str], list[str], int]:
     """Returns (failures, notes, n_gated) — n_gated counts the shared rows
@@ -129,8 +138,19 @@ def compare(baseline: dict, current: dict, qps_tolerance: float = 0.15,
         if _is_qps(name):
             scale = 1.0 if _is_ratio(name) else calib
             adj = cur / scale
-            floor = base * (1.0 - qps_tolerance)
-            if adj < floor:
+            if _is_lower_better(name):
+                ceiling = base * (1.0 + qps_tolerance)
+                if adj > ceiling and adj - base > 1e-12:
+                    failures.append(
+                        f"{name}: {cur:.3f} is "
+                        f"{100 * (adj / base - 1) if base > 0 else 0:.1f}% "
+                        f"above baseline {base:.3f} "
+                        f"(lower is better, tolerance {qps_tolerance:.0%})"
+                    )
+                else:
+                    notes.append(f"{name}: {base:.3f} -> {cur:.3f} ok "
+                                 "(lower is better)")
+            elif adj < base * (1.0 - qps_tolerance):
                 failures.append(
                     f"{name}: {cur:.1f} ({adj:.1f} machine-normalized) is "
                     f"{100 * (1 - adj / base):.1f}% below baseline "

@@ -34,6 +34,7 @@ def _benches(fast: bool):
         bench_queries,
         bench_recovery,
         bench_relalg,
+        bench_serving,
         bench_startup,
     )
 
@@ -49,6 +50,8 @@ def _benches(fast: bool):
             bench_balance.run_skew_sharded,  # Zipf skew: hash vs directory
             bench_recovery.run_recovery_sharded,  # ISSUE 7: worker loss +
             #                                       master-restart recovery
+            bench_serving.run_serving_sharded,  # ISSUE 8: online serving —
+            #               saturation qps, p50/p99, 2x-overload shed rate
         )
     return (
         bench_partition.run,
@@ -67,6 +70,7 @@ def _benches(fast: bool):
         bench_balance.run_skew,  # in-process Zipf skew, hash vs directory
         bench_balance.run_skew_sharded,  # same on the 8-device mesh
         bench_recovery.run_recovery_sharded,  # degraded-mesh + recovery cost
+        bench_serving.run_serving_sharded,  # online serving under SLO
     )
 
 

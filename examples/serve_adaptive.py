@@ -1,9 +1,11 @@
-"""Serve a small model with batched decode requests + adaptive embedding.
+"""Serve a small *language model* with batched decode + adaptive embedding.
 
-Demonstrates the paper's pay-as-you-go loop on the serving side: the
-controller watches request token ids, replicates the hot rows, and the
-embedding's cold-exchange capacity shrinks — the LM equivalent of queries
-flipping from distributed to parallel mode.
+Demonstrates the paper's pay-as-you-go loop on the LM side: the controller
+watches request token ids, replicates the hot rows, and the embedding's
+cold-exchange capacity shrinks — the LM equivalent of queries flipping
+from distributed to parallel mode.  For the RDF engine's own online
+serving front-end (continuous batching under an SLO, admission control,
+load shedding — :mod:`repro.serving`), see ``examples/serve_rdf.py``.
 
 Run:  PYTHONPATH=src python examples/serve_adaptive.py
 """

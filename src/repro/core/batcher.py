@@ -179,7 +179,8 @@ class WorkloadBatcher:
     def buckets(self) -> list[Bucket]:
         return list(self._buckets.values())
 
-    def pop_bucket(self, min_size: int = 2) -> Bucket | None:
+    def pop_bucket(self, min_size: int = 2, force: bool = False
+                   ) -> Bucket | None:
         """Remove and return the oldest bucket holding at least ``min_size``
         queries (FIFO over bucket creation), or None.
 
@@ -195,11 +196,25 @@ class WorkloadBatcher:
         splits the steady-state bucket grouping — the batch shapes an
         IRD-free rerun of the same workload would dispatch — which would
         cost first-time compilations *after* adaptation has settled, exactly
-        when the workload is supposed to be recompile-free."""
+        when the workload is supposed to be recompile-free.
+
+        ``force=True`` ignores ``min_size`` and returns the oldest bucket of
+        *any* occupancy — the serving loop's age/deadline flush (ISSUE 8):
+        under a live stream a unique-shape request opens a singleton bucket
+        that, with ``min_size=2`` alone, would wait forever for a bucket-mate
+        that may never arrive.  The serve loop force-pops when the oldest
+        member nears its SLO deadline; a forced singleton simply runs on the
+        warm sequential path, so the starvation fix costs no new compiles."""
         for plan, bucket in self._buckets.items():
-            if len(bucket) >= min_size:
+            if force or len(bucket) >= min_size:
                 return self._buckets.pop(plan)
         return None
+
+    def pop(self, plan: BatchPlan) -> Bucket | None:
+        """Remove and return the specific bucket keyed by ``plan`` (the
+        serving loop pops exactly the bucket that filled or whose oldest
+        member's deadline is due, not merely the oldest)."""
+        return self._buckets.pop(plan, None)
 
     def __len__(self) -> int:
         return len(self._buckets)

@@ -178,6 +178,12 @@ class AdHashEngine:
         # the shard-local route to the distributed route and adaptivity
         # writes are suspended (DESIGN §9)
         self.health = HealthState(n_workers)
+        # brownout rung 1 (DESIGN §10): the serving front-end sets this under
+        # overload to shed *adaptivity* work before shedding queries — IRD
+        # and rebalancing are deferred exactly like a degraded episode (the
+        # heat map keeps counting, catch-up fires on the first unpaused
+        # query), so the pause is free to enter and converges on exit
+        self.adaptivity_paused = False
         self.report = EngineReport()
         self.startup_time_s = time.perf_counter() - t0
 
@@ -325,36 +331,20 @@ class AdHashEngine:
             bucket = batcher.pop_bucket()
             if bucket is not None:
                 try:
-                    self._execute_bucket(bucket, results)
+                    self.execute_bucket(bucket, results)
                 except ExecutorError as e:
                     deferred_errors.append(e)
 
         # ---- pass 1: adaptivity control, replica-mode execution, bucketing
         demoted: list[int] = []  # PI hits deferred to the distributed route
         for i, q in enumerate(queries):
-            tree = (
-                build_redistribution_tree(q, self.stats, self.heuristic)
-                if self.adaptive else None
+            executed, was_demoted = self.stream_control_step(
+                q, batcher, i, overlap=overlap
             )
-            matches = self.pattern_index.match(tree) if self.adaptive else None
-            if matches is not None and not self.health.degraded:
-                t0 = time.perf_counter()
-                rel, qstats = self.parallel_exec.execute(
-                    tree, matches, self.capacity
-                )
-                results[i] = (rel, qstats, time.perf_counter() - t0)
-            else:
-                if matches is not None:
-                    # degraded demotion (DESIGN §9): the PI hit joins the
-                    # shape buckets like any distributed query — it only
-                    # reads the immutable main index — and its stats are
-                    # route-tagged after execution
-                    demoted.append(i)
-                plan = self.planner.plan(q)
-                batcher.add(i, q, plan.ordering, plan.join_vars,
-                            max(self.capacity, plan.capacity_hint()))
-            if self.adaptive:
-                self._post_query_adaptivity(tree, overlap=overlap)
+            if executed is not None:
+                results[i] = executed
+            elif was_demoted:
+                demoted.append(i)
 
         # the adaptivity control pass is complete for the whole workload;
         # now surface any failure an overlapped bucket hit (no results or
@@ -364,7 +354,7 @@ class AdHashEngine:
 
         # ---- pass 2: one dispatch per remaining shape bucket
         for bucket in batcher.buckets():
-            self._execute_bucket(bucket, results)
+            self.execute_bucket(bucket, results)
 
         # route-tag the demoted PI hits (each bucket member carries its own
         # QueryStats instance, so the tag never leaks to healthy queries)
@@ -391,8 +381,69 @@ class AdHashEngine:
         self.report.wall_time_s += time.perf_counter() - t_all
         return out
 
-    def _execute_bucket(self, bucket, results: list) -> None:
-        """Evaluate one shape bucket and fill its members' result slots."""
+    def stream_control_step(self, q: Query, batcher: WorkloadBatcher,
+                            tag, overlap=None):
+        """One admitted request through the ``query_batch`` control pass —
+        the unit the online serving loop (``repro.serving``) repeats per
+        dequeued request, so a served stream and an offline ``query_batch``
+        of the same query sequence drive one state machine by construction.
+
+        In order: transform, pattern-index match (a healthy hit executes
+        inline over the replica index and is returned), otherwise plan and
+        file the query into ``batcher`` under ``tag``; finally the shared
+        post-query adaptivity hook (heat-map insert -> IRD -> rebalancing,
+        suspended while degraded or ``adaptivity_paused``).
+
+        Returns ``(executed, demoted)``: ``executed`` is the
+        ``(relation, stats, seconds)`` triple when the query ran inline
+        (PI hit), else None once the query joined its shape bucket;
+        ``demoted`` flags a PI hit deferred to the distributed route because
+        the mesh is degraded (DESIGN §9) — the caller route-tags its stats
+        after the bucket executes."""
+        tree = (
+            build_redistribution_tree(q, self.stats, self.heuristic)
+            if self.adaptive else None
+        )
+        matches = self.pattern_index.match(tree) if self.adaptive else None
+        executed = None
+        demoted = False
+        if matches is not None and not self.health.degraded:
+            t0 = time.perf_counter()
+            rel, qstats = self.parallel_exec.execute(
+                tree, matches, self.capacity
+            )
+            executed = (rel, qstats, time.perf_counter() - t0)
+        else:
+            # degraded demotion (DESIGN §9): the PI hit joins the shape
+            # buckets like any distributed query — it only reads the
+            # immutable main index
+            demoted = matches is not None
+            plan = self.planner.plan(q)
+            batcher.add(tag, q, plan.ordering, plan.join_vars,
+                        max(self.capacity, plan.capacity_hint()))
+        if self.adaptive:
+            self._post_query_adaptivity(tree, overlap=overlap)
+        return executed, demoted
+
+    def record_served(self, qstats: QueryStats, dt: float) -> None:
+        """Fold one answered request into the workload report — the serving
+        front-end's per-completion accounting, the same counters
+        ``query_batch`` fills in for an offline workload."""
+        if qstats.mode == "parallel-replica":
+            self.report.n_parallel_replica += 1
+        elif qstats.mode == "parallel":
+            self.report.n_parallel += 1
+        else:
+            self.report.n_distributed += 1
+        self.report.n_queries += 1
+        self.report.comm_cells += qstats.comm_cells
+        self.report.wall_time_s += dt
+        self.report.history.append((qstats.mode, qstats.comm_cells, dt))
+
+    def execute_bucket(self, bucket, results) -> None:
+        """Evaluate one shape bucket and fill its members' result slots
+        (``results[tag] = (relation, stats, seconds)`` — any indexable
+        container keyed by the tags the bucket was filed under)."""
         t0 = time.perf_counter()
         if len(bucket) == 1:
             rels_stats = [self._run_sequential(bucket, 0)]
@@ -450,7 +501,7 @@ class AdHashEngine:
         catch up from the accumulated heat-map counts — once the shard
         recovers."""
         self.heatmap.insert(tree)
-        if self.health.degraded:
+        if self.health.degraded or self.adaptivity_paused:
             return
         self._maybe_redistribute(overlap=overlap)
         self._maybe_rebalance(overlap=overlap)

@@ -1,10 +1,13 @@
-"""Batched serving driver (deliverable b): continuous decode with the
-adaptive controller in the loop.
+"""LM-side batched decode driver (deliverable b): continuous decode with
+the adaptive controller in the loop.
 
-Serves a model on the local mesh with a fixed decode budget per request
-batch; between batches the AdHash-style controller replans the hot
-embedding rows / hot experts from observed traffic, exactly like the RDF
-engine redistributes hot patterns between queries.
+This is the *language-model analogue* of the paper's serving story: a
+fixed decode budget per request batch, with the AdHash-style controller
+replanning hot embedding rows / hot experts from observed traffic between
+batches.  The actual online RDF serving front-end — continuous batching
+under a latency SLO with admission control, backpressure, and load
+shedding over the query engine — lives in :mod:`repro.serving`
+(``ServeLoop``); see ``examples/serve_rdf.py`` and DESIGN.md §10.
 
 Run:  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b --smoke
 """

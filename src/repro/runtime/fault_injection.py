@@ -1,5 +1,6 @@
 """Deterministic fault injection for the recovery test/benchmark harness
-(DESIGN §9).
+(DESIGN §9) — and the shared virtual clock the serving loop runs on
+(DESIGN §10).
 
 Three failure modes from the acceptance checklist, all driven by a virtual
 clock so tests never sleep:
@@ -18,9 +19,19 @@ clock so tests never sleep:
                   save dies *after* writing its temp data but *before*
                   publishing — the window where a non-atomic design would
                   corrupt the previous snapshot.
+
+The clock is first-class: :class:`VirtualClock` is a tiny advance-only
+timeline that the injector, the ``HeartbeatMonitor``/``StragglerPolicy``
+``now=`` parameters, and ``repro.serving.ServeLoop`` all share — one test
+can script request arrivals, heartbeats, straggler reports and worker kills
+on a single deterministic timeline (ISSUE 8).  :class:`WallClock` is the
+drop-in production counterpart (real time advances itself, so ``advance``
+is the no-op that lets the serve loop charge modeled service time only on
+virtual timelines).
 """
 from __future__ import annotations
 
+import time
 from contextlib import contextmanager
 from dataclasses import dataclass, field
 
@@ -29,7 +40,51 @@ from repro.core.engine import AdHashEngine
 from .fault_tolerance import HeartbeatMonitor
 
 __all__ = ["CheckpointCrash", "crash_before_publish", "FaultInjector",
-           "run_with_failure"]
+           "run_with_failure", "VirtualClock", "WallClock"]
+
+
+class VirtualClock:
+    """Advance-only deterministic timeline (seconds, starts at 0).
+
+    Everything time-driven in the failure/serving harnesses reads the same
+    instance: the fault injector ticks it, the heartbeat monitor and the
+    straggler policy receive it through their ``now=`` parameters, and the
+    serve loop charges modeled service time to it.  Tests never sleep."""
+
+    def __init__(self, now: float = 0.0):
+        self._now = float(now)
+
+    def now(self) -> float:
+        return self._now
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"virtual time cannot rewind (dt={dt})")
+        self._now += float(dt)
+        return self._now
+
+    def advance_to(self, t: float) -> float:
+        """Jump forward to absolute time ``t`` (no-op if already past)."""
+        self._now = max(self._now, float(t))
+        return self._now
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"VirtualClock(now={self._now:.6f})"
+
+
+class WallClock:
+    """The production clock: ``time.monotonic`` with a no-op ``advance``
+    (real execution advances real time by itself — charging modeled service
+    time is a virtual-timeline concept)."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+    def advance(self, dt: float) -> float:
+        return self.now()
+
+    def advance_to(self, t: float) -> float:
+        return self.now()
 
 
 class CheckpointCrash(RuntimeError):
@@ -63,19 +118,35 @@ class FaultInjector:
     ``tick`` advances the clock, beats every live worker and syncs the
     engine's health state — the one place the HEALTHY/DEGRADED transition
     happens, so tests and benches exercise the production path rather than
-    poking ``health.mark_failed`` directly."""
+    poking ``health.mark_failed`` directly.
+
+    The timeline lives in :attr:`clock` (a :class:`VirtualClock` by
+    default) so other time-driven components — most importantly a
+    ``repro.serving.ServeLoop`` — can share it: pass ``clock=inj.clock``
+    to the loop and one test scripts arrivals, heartbeats, straggler
+    reports and failures against a single deterministic clock."""
 
     engine: AdHashEngine
     monitor: HeartbeatMonitor
-    now: float = 0.0
+    clock: VirtualClock = field(default_factory=VirtualClock)
     dead: set[int] = field(default_factory=set)
+
+    @property
+    def now(self) -> float:
+        return self.clock.now()
 
     def tick(self, dt: float = 1.0) -> bool:
         """Advance time; returns True if the health state changed."""
-        self.now += dt
+        self.clock.advance(dt)
         for w in range(self.engine.w):
             if w not in self.dead:
                 self.monitor.beat(w, now=self.now)
+        return self.engine.health.sync(self.monitor, now=self.now)
+
+    def sync(self) -> bool:
+        """Re-sync health at the current time without beating anyone —
+        the serve loop's per-pump detector poll (silent workers cross the
+        deadline as the *loop's* clock advances, no tick needed)."""
         return self.engine.health.sync(self.monitor, now=self.now)
 
     def kill(self, worker: int) -> None:

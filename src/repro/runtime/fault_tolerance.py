@@ -136,6 +136,23 @@ class StragglerPolicy:
         their first report — too late for one that never reports)."""
         self.known_pods.update(int(p) for p in pods)
 
+    def classify_at(self, report_times: dict[int, float], step_start: float,
+                    now: float) -> dict[int, str]:
+        """Virtual-clock variant of :meth:`classify` (ISSUE 8 satellite):
+        ``report_times`` are *absolute* completion timestamps on the same
+        timeline the fault injector and the serve loop share (a
+        ``repro.runtime.fault_injection.VirtualClock``).  Only reports that
+        have already happened by ``now`` are visible; a pod whose report
+        lies in the future — or that never reported — is silent, exactly
+        the hard-crash case :meth:`classify` treats as past-deadline.  Call
+        it at (or after) the step deadline, like the step loop would."""
+        if now < step_start:
+            raise ValueError(f"now={now} precedes step_start={step_start}")
+        return self.classify({
+            pod: t - step_start
+            for pod, t in report_times.items() if t <= now
+        })
+
     def classify(self, pod_times: dict[int, float]) -> dict[int, str]:
         """'ok' | 'straggler' | 'evict' per known pod.  A pod missing from
         ``pod_times`` is past-deadline by definition — it never reported."""

@@ -1,0 +1,21 @@
+"""Online serving front-end for the AdHash engine (ISSUE 8, DESIGN §10).
+
+Continuous batching under a latency SLO with admission control (bounded
+queue + per-client token buckets -> ``RetryAfter`` backpressure),
+deadline-based load shedding (``SheddedResult``, never silently late), a
+brownout ladder that sheds adaptivity work before queries, degraded-mesh
+tightening, and periodic adaptivity checkpointing — all on an injected
+clock so every behaviour is deterministically testable without sleeping.
+"""
+from .admission import AdmissionController, BrownoutController, TokenBucket
+from .arrivals import open_loop_arrivals, replay_open_loop
+from .loop import ServeConfig, ServeLoop
+from .request import (Request, RetryAfter, ServedResult, ServeReport,
+                      SheddedResult)
+
+__all__ = [
+    "AdmissionController", "BrownoutController", "TokenBucket",
+    "open_loop_arrivals", "replay_open_loop",
+    "ServeConfig", "ServeLoop",
+    "Request", "RetryAfter", "ServedResult", "ServeReport", "SheddedResult",
+]

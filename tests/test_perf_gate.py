@@ -1,0 +1,61 @@
+"""Unit coverage for the CI perf gate's row semantics (benchmarks/compare).
+
+The serving bench introduced lower-is-better ratio rows (shed fractions):
+``_x`` rows containing ``shed`` must gate on an *increase*, while every
+other ``_x``/``_qps`` row keeps gating on a drop.  A gate that silently
+treated a rising shed rate as an improvement would wave through exactly
+the regression the serving suite exists to catch.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.compare import compare  # noqa: E402
+
+
+def _rows(**kv):
+    return {k: {"value": v, "derived": ""} for k, v in kv.items()}
+
+
+def test_qps_row_gates_on_drop():
+    base = _rows(**{"a/x_qps": 100.0})
+    fails, _, n = compare(base, _rows(**{"a/x_qps": 80.0}), 0.15,
+                          normalize=False)
+    assert fails and n == 1
+    fails, _, _ = compare(base, _rows(**{"a/x_qps": 90.0}), 0.15,
+                          normalize=False)
+    assert not fails
+
+
+def test_shed_ratio_gates_on_increase_only():
+    base = _rows(**{"serving/w8d8/shed_frac_x": 0.40})
+    # up past tolerance -> regression
+    fails, _, _ = compare(base, _rows(**{"serving/w8d8/shed_frac_x": 0.50}),
+                          0.15, normalize=False)
+    assert fails, "rising shed rate must fail the gate"
+    # down -> improvement, never a failure (a plain _x row would gate this)
+    fails, _, _ = compare(base, _rows(**{"serving/w8d8/shed_frac_x": 0.10}),
+                          0.15, normalize=False)
+    assert not fails
+    # within tolerance -> ok
+    fails, _, _ = compare(base, _rows(**{"serving/w8d8/shed_frac_x": 0.44}),
+                          0.15, normalize=False)
+    assert not fails
+
+
+def test_shed_ratio_is_not_machine_normalized():
+    # a uniformly faster machine (qps rows 2x) must not excuse a shed jump
+    base = _rows(**{"a/x_qps": 100.0, "b/y_qps": 100.0, "c/z_qps": 100.0,
+                    "s/shed_frac_x": 0.40})
+    cur = _rows(**{"a/x_qps": 200.0, "b/y_qps": 200.0, "c/z_qps": 200.0,
+                   "s/shed_frac_x": 0.60})
+    fails, _, _ = compare(base, cur, 0.15, normalize=True)
+    assert any("shed_frac_x" in f for f in fails)
+
+
+def test_ms_rows_are_informational():
+    base = _rows(**{"serving/w8d8/p99_ms": 10.0})
+    fails, _, n = compare(base, _rows(**{"serving/w8d8/p99_ms": 50.0}),
+                          0.15, normalize=False)
+    assert not fails and n == 0
