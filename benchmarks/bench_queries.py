@@ -288,6 +288,148 @@ def run_sharded(n_devices: int = 8) -> list[tuple[str, float, str]]:
     ]
 
 
+# ------------------------------------- ISSUE 9: main-index chain fast path
+_STAR_ARTIFACT = "artifacts/subject_star_sharded.json"
+
+
+def _subject_star_child(out_path: str = _STAR_ARTIFACT, n_workers: int = 8,
+                        n_queries: int = 24, trials: int = 7,
+                        n_devices: int = 8) -> None:
+    """Runs inside the forced-8-device subprocess: subject-star (case-(i))
+    queries over the main index, fused chain route vs the same engine with
+    the chain disabled (the pre-ISSUE-9 distributed route)."""
+    from repro.core.substrate import MeshSubstrate, trace_host_syncs
+
+    import jax
+
+    got = len(jax.devices())
+    if got != n_devices:  # a pre-set XLA_FLAGS overrode the forced count
+        raise RuntimeError(
+            f"expected {n_devices} forced host devices, found {got}; "
+            "the artifact would measure the wrong topology"
+        )
+
+    from repro.core.query import Const, Query, TriplePattern, Var
+
+    d, triples = lubm_like(n_universities=4, depts_per_univ=3,
+                           profs_per_dept=4, students_per_prof=6)
+    wl = Workload(d, seed=5)
+    kw = dict(adaptive=False, capacity=256, use_count_oracle=False)
+    fast = AdHashEngine(triples, n_workers, substrate=MeshSubstrate(), **kw)
+    dist = AdHashEngine(triples, n_workers, substrate=MeshSubstrate(),
+                        local_chain=False, **kw)
+
+    # a three-pattern subject star (the paper's case-(i) shape): anchored by
+    # a takesCourse constant, extended by type + advisor.  The chain fuses
+    # all three stages into one dispatch; the distributed route pays one
+    # dispatch + one all-reduce + one host sync *per stage*.
+    def star(course_id):
+        x = Var("x")
+        return Query([
+            TriplePattern(x, Const(d.lookup("ub:takesCourse")),
+                          Const(course_id)),
+            TriplePattern(x, Const(d.lookup("rdf:type")),
+                          Const(d.lookup("ub:Student"))),
+            TriplePattern(x, Const(d.lookup("ub:advisor")), Var("y")),
+        ], name="star3")
+
+    courses = np.unique(triples[
+        triples[:, 1] == d.lookup("ub:takesCourse"), 2])
+    # one fixed workload: warm timing measures the *route* (dispatches,
+    # syncs, collectives), not per-fresh-constant planning — the planner
+    # memo serves repeats on both engines identically
+    qs = [star(int(c))
+          for c in wl.rng.choice(courses, size=n_queries, replace=False)]
+    for _ in range(2):  # warm: compile + settle capacity classes + plans
+        for q in qs:
+            fast.query(q)
+            dist.query(q)
+
+    fast_trials, dist_trials, recompiles = [], [], 0
+    routes = set()
+    for _ in range(trials):
+        cache0 = be.probe_compile_cache_size()
+        t0 = time.perf_counter()
+        for q in qs:
+            _, st = fast.query(q)
+            routes.add(st.route)
+        fast_trials.append(time.perf_counter() - t0)
+        recompiles += be.probe_compile_cache_size() - cache0
+        t0 = time.perf_counter()
+        for q in qs:
+            dist.query(q)
+        dist_trials.append(time.perf_counter() - t0)
+    if routes != {"mesh-local-main"}:
+        raise RuntimeError(f"star workload left the chain route: {routes}")
+
+    # the one-sync invariant, on a fully warm repeated query (plan memo hit)
+    q = qs[0]
+    fast.query(q)
+    with trace_host_syncs() as tr:
+        for _ in range(8):
+            fast.query(q)
+    syncs_per_query = tr.host_transfers / 8.0
+
+    # median, not best-of (see _sharded_child)
+    out = {
+        "n_devices": got,
+        "n_workers": n_workers,
+        "n_queries_per_trial": n_queries,
+        "trials": trials,
+        "local_main_qps": n_queries / float(np.median(fast_trials)),
+        "distributed_qps": n_queries / float(np.median(dist_trials)),
+        "host_syncs_per_query": syncs_per_query,
+        "post_warm_recompiles": recompiles,
+    }
+    Path(out_path).parent.mkdir(parents=True, exist_ok=True)
+    Path(out_path).write_text(json.dumps(out, indent=2))
+
+
+def run_subject_star_sharded(n_devices: int = 8
+                             ) -> list[tuple[str, float, str]]:
+    """Main-index subject-star fast path vs distributed route (ISSUE 9).
+
+    Spawns the forced-8-device subprocess, which writes
+    ``artifacts/subject_star_sharded.json``: queries/s on the fused
+    zero-collective ``mesh-local-main`` route vs the same queries with the
+    chain disabled, host syncs per warm query (must be exactly 1) and
+    post-warmup recompiles (must be zero)."""
+    root = Path(__file__).resolve().parent.parent
+    env = {
+        **os.environ,
+        # appended last: XLA flag parsing is last-wins (child asserts)
+        "XLA_FLAGS": (os.environ.get("XLA_FLAGS", "") +
+                      f" --xla_force_host_platform_device_count={n_devices}"),
+        "PYTHONPATH": os.pathsep.join(
+            [str(root), str(root / "src"),
+             os.environ.get("PYTHONPATH", "")]),
+    }
+    subprocess.run(
+        [sys.executable, "-c",
+         "from benchmarks.bench_queries import _subject_star_child; "
+         f"_subject_star_child(n_devices={n_devices})"],
+        check=True, cwd=str(root), env=env, timeout=900,
+    )
+    data = json.loads((root / _STAR_ARTIFACT).read_text())
+    assert data["host_syncs_per_query"] == 1.0, data
+    w = data["n_workers"]
+    tag = f"star/w{w}d{data['n_devices']}"
+    return [
+        (f"{tag}/local_main_qps", data["local_main_qps"],
+         f"n_queries={data['n_queries_per_trial']}"),
+        (f"{tag}/distributed_qps", data["distributed_qps"],
+         "chain disabled (pre-change route)"),
+        (f"{tag}/speedup_x",
+         data["local_main_qps"] / data["distributed_qps"],
+         "local_main vs distributed"),
+        (f"{tag}/host_syncs_per_query", data["host_syncs_per_query"],
+         "must_be_one"),
+        (f"{tag}/post_warm_recompiles",
+         float(data["post_warm_recompiles"]), "must_be_zero"),
+    ]
+
+
 if __name__ == "__main__":
-    for r in run() + run_batched() + run_sharded():
+    for r in (run() + run_batched() + run_sharded()
+              + run_subject_star_sharded()):
         print(",".join(map(str, r)))

@@ -28,6 +28,17 @@ from the full-depth scanned artifact, which is exact (scan reuses buffers).
 
 MODEL_FLOPS = 6*N*D (train), 2*N*D (prefill/decode), N = active params.
 The useful-compute ratio MODEL/HLO catches remat + dispatch waste.
+
+DSJ AUDIT (--dsj).  Orthogonal mode for the query engine: measures, per
+*warm* query and per execution route, the three dispatch-level costs the
+roofline terms above cannot see — device->host transfers (the sync points
+that stall the dispatch queue), jitted stage dispatches, and cross-shard
+collective launches (counted on the compiled HLO of exactly the stages the
+query dispatched).  Runs on a forced 8-device CPU host in a subprocess and
+writes artifacts/dsj_roofline.json.  The claim under test (ISSUE 9): a
+subject-star query over the main index costs 1 dispatch / 1 host sync /
+0 collectives on the ``mesh-local-main`` chain route, vs one sync and one
+all-reduce *per stage* on the distributed route.
 """
 
 import argparse
@@ -137,6 +148,141 @@ def cell_terms(arch: str, shape_name: str, art_dir: Path, mesh=None,
     }
 
 
+# --------------------------------------------------------------- DSJ audit
+_DSJ_CHILD = r"""
+import os
+# appended last: XLA flag parsing is last-wins, so the 8-device count beats
+# the 512-device flag the parent roofline module exports
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+import json, re, sys
+import numpy as np
+import repro.core  # x64 on, before any jax array work
+import jax
+import repro.core.substrate as sbm
+from repro.core.engine import AdHashEngine
+from repro.data.synthetic_rdf import lubm_like, lubm_queries
+
+COLLECTIVE_OPS = ("all-to-all", "all-gather", "all-reduce",
+                  "reduce-scatter", "collective-permute",
+                  "collective-broadcast")
+
+# instrument every mesh stage wrapper: the substrate instance methods call
+# these module globals by name, so rebinding the module attribute records
+# each dispatch with its exact (args, kwargs) — which also lets the audit
+# lower the *dispatched* computation and count its compiled collectives
+calls = []
+for _name in [n for n in list(vars(sbm))
+              if n.endswith("_sharded") or n.endswith("_shardlocal")]:
+    _fn = getattr(sbm, _name)
+    if not hasattr(_fn, "lower"):
+        continue
+    def _mk(fn, name):
+        def wrapped(*a, **kw):
+            calls.append((name, fn, a, kw))
+            return fn(*a, **kw)
+        return wrapped
+    setattr(sbm, _name, _mk(_fn, _name))
+
+
+def count_collectives(txt):
+    out = {}
+    for op in COLLECTIVE_OPS:
+        n = len(re.findall(rf"\s{op}(?:-start|-done)?\(", txt))
+        if n:
+            out[op] = n
+    return out
+
+
+def measure(eng, q, label):
+    calls.clear()
+    with sbm.trace_host_syncs() as tr:
+        rel, st = eng.query(q)
+    coll = {}
+    for name, fn, a, kw in calls:
+        txt = fn.lower(*a, **kw).compile().as_text()
+        for op, n in count_collectives(txt).items():
+            coll[op] = coll.get(op, 0) + n
+    return {
+        "route": label,
+        "query_route_tag": st.route,
+        "host_syncs": tr.host_transfers,
+        "dispatches": len(calls),
+        "stages": sorted({name for name, *_ in calls}),
+        "collectives": sum(coll.values()),
+        "collective_breakdown": coll,
+        "comm_cells": st.comm_cells,
+        "n_retries": st.n_retries,
+    }
+
+
+d, triples = lubm_like(n_universities=4, depts_per_univ=3, profs_per_dept=4,
+                       students_per_prof=6)
+qs = lubm_queries(d)
+star = qs["q1"].instantiate(np.random.default_rng(0))
+dsjq = qs["q7"].instantiate(np.random.default_rng(0))
+mesh = lambda: sbm.MeshSubstrate()
+
+rows = []
+# chain route vs the same query forced down the distributed route
+cold = dict(adaptive=True, frequency_threshold=10 ** 6, capacity=1024)
+fast = AdHashEngine(triples, 8, substrate=mesh(), **cold)
+dist = AdHashEngine(triples, 8, substrate=mesh(), local_chain=False, **cold)
+for _ in range(2):  # warm: compile + settle capacity classes
+    fast.query(star); dist.query(star); dist.query(dsjq)
+rows.append(measure(fast, star, "mesh-local-main"))
+rows.append(measure(dist, star, "distributed (chain disabled)"))
+rows.append(measure(dist, dsjq, "distributed (object-object DSJ)"))
+
+# degraded: a dark shard demotes the chain to the staged route
+fast.health.mark_failed(3)
+fast.query(star)  # settle the staged shapes under demotion
+rows.append(measure(fast, star, "mesh-degraded"))
+fast.health.mark_recovered(3)
+
+# PI-hit route: adaptivity replicates the hot pattern, then serves it
+# shard-locally from the replica index
+hot = AdHashEngine(triples, 8, substrate=mesh(), adaptive=True,
+                   frequency_threshold=2, capacity=1024)
+for _ in range(4):
+    hot.query(star)
+rows.append(measure(hot, star, "mesh-local (PI hit)"))
+
+json.dump(rows, sys.stdout)
+"""
+
+
+def dsj_audit(out_path: Path) -> int:
+    """Run the per-route dispatch/host-sync/collective audit on a forced
+    8-device CPU host (subprocess: the device count must be pinned before
+    jax initializes) and write the per-route rows to ``out_path``."""
+    import subprocess
+
+    root = Path(__file__).resolve().parent.parent
+    env = {**os.environ,
+           "PYTHONPATH": os.pathsep.join(
+               [str(root / "src"), os.environ.get("PYTHONPATH", "")])}
+    res = subprocess.run(
+        [sys.executable, "-c", _DSJ_CHILD], capture_output=True, text=True,
+        env=env, cwd=str(root), timeout=900,
+    )
+    if res.returncode != 0:
+        print(res.stderr[-4000:], file=sys.stderr)
+        return 1
+    rows = json.loads(res.stdout)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rows, indent=1))
+    for r in rows:
+        print(
+            f"{r['route']:34s} dispatches={r['dispatches']:2d} "
+            f"host_syncs={r['host_syncs']:2d} "
+            f"collectives={r['collectives']:2d} "
+            f"comm_cells={r['comm_cells']}",
+            flush=True,
+        )
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="")
@@ -144,7 +290,13 @@ def main(argv=None) -> int:
     ap.add_argument("--art", default="artifacts/dryrun")
     ap.add_argument("--out", default="artifacts/roofline.json")
     ap.add_argument("--optimized", action="store_true")
+    ap.add_argument("--dsj", action="store_true",
+                    help="DSJ per-route dispatch/host-sync audit (ISSUE 9)")
+    ap.add_argument("--dsj-out", default="artifacts/dsj_roofline.json")
     args = ap.parse_args(argv)
+
+    if args.dsj:
+        return dsj_audit(Path(args.dsj_out))
 
     from repro.configs import ARCH_IDS, applicable_shapes
     from repro.launch.mesh import make_production_mesh

@@ -46,6 +46,8 @@ def _benches(fast: bool):
             bench_relalg.run,
             bench_queries.run_batched,
             bench_queries.run_sharded,
+            bench_queries.run_subject_star_sharded,  # ISSUE 9: fused
+            #        zero-collective main-index chain vs distributed route
             bench_adaptivity.run_parallel_mode_sharded,
             bench_balance.run_skew_sharded,  # Zipf skew: hash vs directory
             bench_recovery.run_recovery_sharded,  # ISSUE 7: worker loss +
@@ -62,6 +64,8 @@ def _benches(fast: bool):
         bench_queries.run_batched,  # batched vs sequential throughput
         bench_queries.run_sharded,  # mesh substrate vs single device (JSON
         #                             artifact: artifacts/sharded_queries.json)
+        bench_queries.run_subject_star_sharded,  # ISSUE 9: chain fast path
+        #                   (artifact: artifacts/subject_star_sharded.json)
         bench_adaptivity.run,
         bench_adaptivity.run_parallel_mode_sharded,  # shard-local PI hits
         #                     vs all_to_all (artifacts/parallel_mode_sharded)

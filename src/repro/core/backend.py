@@ -212,6 +212,10 @@ def probe_compile_cache_size() -> int:
         dsj.probe_and_reply,
         dsj.finalize_join,
         dsj.local_probe_join,
+        dsj.local_chain,
+        dsj.local_chain_from,
+        dsj.local_chain_batch,
+        dsj.local_chain_from_batch,
         dsj.match_first_batch,
         dsj.project_unique_batch,
         dsj.exchange_hash_batch,

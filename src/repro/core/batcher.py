@@ -77,6 +77,12 @@ class BatchPlan:
     def n_dsj(self) -> int:
         return sum(1 for s in self.steps if s.kind != "local")
 
+    @property
+    def local_chain(self) -> bool:
+        """True when every step is case (i) — the whole bucket can ride the
+        fused zero-collective main-index chain (DESIGN §11)."""
+        return self.n_dsj == 0
+
 
 @dataclass
 class Bucket:

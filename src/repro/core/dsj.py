@@ -26,7 +26,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .backend import range_search
+from .backend import get_impl, range_search, register_impl
 from .placement import splitmix64_jnp
 from .query import O, P, S, TriplePattern, Var
 from .relalg import bucket_by_dest, expand, unique_compact
@@ -35,6 +35,7 @@ from .triples import ShardedTripleStore, gather_rows, match_ranges, probe_values
 
 __all__ = [
     "PatternSpec",
+    "ChainStep",
     "jnp_hash_ids",
     "match_first",
     "project_unique",
@@ -45,6 +46,8 @@ __all__ = [
     "probe_and_reply",
     "finalize_join",
     "local_probe_join",
+    "local_chain",
+    "local_chain_from",
     "match_first_batch",
     "project_unique_batch",
     "exchange_hash_batch",
@@ -52,6 +55,8 @@ __all__ = [
     "probe_and_reply_batch",
     "finalize_join_batch",
     "local_probe_join_batch",
+    "local_chain_batch",
+    "local_chain_from_batch",
 ]
 
 I32MAX = jnp.iinfo(jnp.int32).max
@@ -82,6 +87,21 @@ class PatternSpec:
             same_var_so=isinstance(q.s, Var) and q.s == q.o,
             var_cols=tuple(c for _, c in q.var_cols()),
         )
+
+
+@dataclass(frozen=True)
+class ChainStep:
+    """Host-static description of one case-(i) local join in a fused chain.
+
+    Mirrors the argument block of ``local_probe_join`` (c2 is always the
+    pinned subject for main-index chains, but the probe column is kept
+    explicit so replica-index chains could reuse the machinery)."""
+
+    spec: PatternSpec
+    join_col_rel: int  # c1: column of the running relation carrying join var
+    probe_col: int  # c2: triple column the values bind (S in case (i))
+    shared_checks: tuple[tuple[int, int], ...]
+    append_cols: tuple[int, ...]
 
 
 def pattern_consts(q: TriplePattern) -> jnp.ndarray:
@@ -562,3 +582,150 @@ def local_probe_join_batch(
     return jax.vmap(fn, in_axes=(None, 0, 0, 0))(
         store, rel_cols, rel_valid, consts
     )
+
+
+# ================================================ fused case-(i) chain bodies
+# When *every* join of a query is case (i) (subject-star under a
+# local-join-safe placement — the paper's Observation (i)), the whole query
+# is one communication-free per-shard program: match_first followed by N
+# local probe joins.  The bodies below fuse that program into a single
+# traceable function so the substrate can stage the entire chain as ONE
+# dispatch (one shard_map body on the mesh) instead of one per stage, and so
+# the executor can defer every overflow check to a single stacked totals
+# vector fetched once at chain end (the speculative one-sync retry protocol,
+# DESIGN.md §11).
+#
+# The bodies dispatch through the data-plane registry
+# (``get_impl("local_chain*", backend)``) like every other hot primitive:
+# the reference composition below simply chains the stage functions (so
+# answers are bit-identical to the per-stage path by construction), while a
+# Pallas provider may re-register a fused per-shard grid pass.
+
+
+def _local_chain_body(store, consts, first_spec, first_keep, steps, caps,
+                      backend):
+    """match_first + N local probe joins; returns (per-stage rels, totals).
+
+    ``consts`` is (1+N, 3); ``caps[i]`` is stage i's capacity class.
+    ``first_keep`` drops duplicate-variable columns after the first match
+    (the c1 indices in ``steps`` assume the post-keep layout, exactly as the
+    sequential executor and BatchPlan do).  Per-stage intermediates are all
+    returned because the speculative retry restarts from the last accepted
+    stage.  totals is (1+N,) stacked stage-major."""
+    cols, valid, t0 = match_first(store, consts[0], first_spec, caps[0],
+                                  backend=backend)
+    if len(first_keep) != len(first_spec.var_cols):
+        cols = cols[..., list(first_keep)]
+    rels = [(cols, valid)]
+    totals = [t0]
+    for i, stp in enumerate(steps):
+        cols, valid, t = local_probe_join(
+            store, cols, valid, consts[1 + i], stp.spec, stp.join_col_rel,
+            stp.probe_col, stp.shared_checks, stp.append_cols, caps[1 + i],
+            backend=backend,
+        )
+        rels.append((cols, valid))
+        totals.append(t)
+    return tuple(rels), jnp.stack(totals)
+
+
+def _local_chain_from_body(store, rel_cols, rel_valid, consts, steps, caps,
+                           backend):
+    """Suffix restart: re-run ``steps`` seeded from an accepted intermediate.
+
+    ``consts`` is (N_tail, 3) aligned with ``steps``/``caps`` (row i feeds
+    step i).  Used by the retry protocol to re-run only the overflowed
+    suffix of a chain."""
+    cols, valid = rel_cols, rel_valid
+    rels = []
+    totals = []
+    for i, stp in enumerate(steps):
+        cols, valid, t = local_probe_join(
+            store, cols, valid, consts[i], stp.spec, stp.join_col_rel,
+            stp.probe_col, stp.shared_checks, stp.append_cols, caps[i],
+            backend=backend,
+        )
+        rels.append((cols, valid))
+        totals.append(t)
+    return tuple(rels), jnp.stack(totals)
+
+
+register_impl("local_chain", "searchsorted")(_local_chain_body)
+register_impl("local_chain_from", "searchsorted")(_local_chain_from_body)
+
+
+@partial(jax.jit, static_argnames=("first_spec", "first_keep", "steps",
+                                   "caps", "backend"))
+def local_chain(
+    store: ShardedTripleStore,
+    consts: jax.Array,  # (1+N, 3) int32, row 0 = first pattern
+    first_spec: PatternSpec,
+    first_keep: tuple[int, ...],
+    steps: tuple[ChainStep, ...],
+    caps: tuple[int, ...],  # (1+N,) per-stage capacity classes
+    backend: str = "searchsorted",
+) -> tuple[tuple[tuple[jax.Array, jax.Array], ...], jax.Array]:
+    """Whole case-(i) query in one dispatch.
+
+    Returns (rels, totals) where rels[i] = (cols (W, caps[i], k_i), valid)
+    for stage i (0 = post-match_first) and totals is the (1+N,) stacked
+    per-stage overflow vector — the executor's single host sync."""
+    return get_impl("local_chain", backend)(
+        store, consts, first_spec, first_keep, steps, caps, backend
+    )
+
+
+@partial(jax.jit, static_argnames=("steps", "caps", "backend"))
+def local_chain_from(
+    store: ShardedTripleStore,
+    rel_cols: jax.Array,  # (W, capR, k) accepted intermediate
+    rel_valid: jax.Array,
+    consts: jax.Array,  # (N_tail, 3) aligned with steps
+    steps: tuple[ChainStep, ...],
+    caps: tuple[int, ...],
+    backend: str = "searchsorted",
+) -> tuple[tuple[tuple[jax.Array, jax.Array], ...], jax.Array]:
+    """Retry entry point: run a chain suffix from a saved intermediate."""
+    return get_impl("local_chain_from", backend)(
+        store, rel_cols, rel_valid, consts, steps, caps, backend
+    )
+
+
+@partial(jax.jit, static_argnames=("first_spec", "first_keep", "steps",
+                                   "caps", "backend"))
+def local_chain_batch(
+    store: ShardedTripleStore,
+    consts: jax.Array,  # (B, 1+N, 3)
+    first_spec: PatternSpec,
+    first_keep: tuple[int, ...],
+    steps: tuple[ChainStep, ...],
+    caps: tuple[int, ...],
+    backend: str = "searchsorted",
+) -> tuple[tuple[tuple[jax.Array, jax.Array], ...], jax.Array]:
+    """Batched fused chain: one dispatch for a whole shape bucket.
+
+    rels[i] leaves gain a leading B axis; totals comes back (1+N, B)
+    stage-major so the executor can take per-stage maxima without a
+    transpose on the host."""
+    body = get_impl("local_chain", backend)
+    fn = lambda c: body(store, c, first_spec, first_keep, steps, caps,
+                        backend)
+    rels, totals = jax.vmap(fn)(consts)
+    return rels, jnp.swapaxes(totals, 0, 1)
+
+
+@partial(jax.jit, static_argnames=("steps", "caps", "backend"))
+def local_chain_from_batch(
+    store: ShardedTripleStore,
+    rel_cols: jax.Array,  # (B, W, capR, k)
+    rel_valid: jax.Array,
+    consts: jax.Array,  # (B, N_tail, 3)
+    steps: tuple[ChainStep, ...],
+    caps: tuple[int, ...],
+    backend: str = "searchsorted",
+) -> tuple[tuple[tuple[jax.Array, jax.Array], ...], jax.Array]:
+    """Batched suffix restart; totals (N_tail, B) stage-major."""
+    body = get_impl("local_chain_from", backend)
+    fn = lambda rc, rv, c: body(store, rc, rv, c, steps, caps, backend)
+    rels, totals = jax.vmap(fn)(rel_cols, rel_valid, consts)
+    return rels, jnp.swapaxes(totals, 0, 1)

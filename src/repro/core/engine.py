@@ -55,7 +55,8 @@ class EngineReport:
     n_evictions: int = 0
     n_rebalances: int = 0  # hot-key splits published (directory placement)
     rebalance_comm_cells: int = 0  # main-store cells moved by rebalances
-    n_degraded: int = 0  # PI hits demoted to the distributed route (DESIGN §9)
+    n_degraded: int = 0  # shard-local queries (PI hits + main-index chains)
+    # demoted to the distributed route by a dark shard (DESIGN §9/§11)
     n_batch_dispatches: int = 0  # batched-pipeline launches (query_batch)
     wall_time_s: float = 0.0
     history: list[tuple[str, int, float]] = field(default_factory=list)
@@ -85,6 +86,7 @@ class AdHashEngine:
         substrate=None,
         placement=None,
         skew_threshold: float = 2.0,
+        local_chain: bool = True,
     ):
         from .substrate import SingleDeviceSubstrate
 
@@ -154,12 +156,19 @@ class AdHashEngine:
                     top.astype(np.int64), deg[top].astype(np.int64)
                 )
 
+        # worker health: while any shard is failed, PI hits and main-index
+        # chains are demoted from the shard-local routes to the distributed
+        # route and adaptivity writes are suspended (DESIGN §9) — created
+        # before the Executor so route selection can consult it
+        self.health = HealthState(n_workers)
+
         oracle = self._count_pattern if use_count_oracle else None
         self.planner = LocalityAwarePlanner(self.stats, n_workers, oracle)
         self.executor = Executor(
             self.store, n_workers, locality_aware, pinned_opt,
             probe_backend=self.probe_backend, substrate=self.substrate,
-            placement=self.placement,
+            placement=self.placement, health=self.health,
+            local_chain=local_chain,
         )
         self.heatmap = HeatMap()
         self.pattern_index = PatternIndex()
@@ -174,10 +183,6 @@ class AdHashEngine:
             placement=self.placement,
         )
         self._no_redistribute: set = set()
-        # worker health: while any shard is failed, PI hits are demoted from
-        # the shard-local route to the distributed route and adaptivity
-        # writes are suspended (DESIGN §9)
-        self.health = HealthState(n_workers)
         # brownout rung 1 (DESIGN §10): the serving front-end sets this under
         # overload to shed *adaptivity* work before shedding queries — IRD
         # and rebalancing are deferred exactly like a degraded episode (the
@@ -241,6 +246,9 @@ class AdHashEngine:
             )
             if degraded:
                 qstats.route = f"{self.substrate.name}-degraded"
+            # count every demotion once, by route suffix: PI hits demoted
+            # here and main-index chains demoted inside the Executor
+            if qstats.route.endswith("-degraded"):
                 self.report.n_degraded += 1
             if qstats.mode == "parallel":
                 self.report.n_parallel += 1
@@ -361,13 +369,16 @@ class AdHashEngine:
         for i in demoted:
             assert results[i] is not None
             results[i][1].route = f"{self.substrate.name}-degraded"
-            self.report.n_degraded += 1
 
         # ---- workload report, in original query order
         out: list[tuple[Relation, QueryStats]] = []
         for item in results:
             assert item is not None
             rel, qstats, dt = item
+            # demotions counted once by route suffix — covers PI hits tagged
+            # above and main-index chains demoted inside the Executor
+            if qstats.route.endswith("-degraded"):
+                self.report.n_degraded += 1
             if qstats.mode == "parallel-replica":
                 self.report.n_parallel_replica += 1
             elif qstats.mode == "parallel":
@@ -429,6 +440,8 @@ class AdHashEngine:
         """Fold one answered request into the workload report — the serving
         front-end's per-completion accounting, the same counters
         ``query_batch`` fills in for an offline workload."""
+        if qstats.route.endswith("-degraded"):
+            self.report.n_degraded += 1
         if qstats.mode == "parallel-replica":
             self.report.n_parallel_replica += 1
         elif qstats.mode == "parallel":

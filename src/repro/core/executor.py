@@ -24,6 +24,7 @@ from . import dsj
 from .backend import quantize_capacity
 from .query import O, P, S, Query, TriplePattern, Var
 from .relation import Relation
+from .substrate import host_chain_totals, host_fetch, host_total
 from .triples import ShardedTripleStore
 
 __all__ = ["QueryStats", "Executor", "ExecutorError"]
@@ -45,7 +46,10 @@ class QueryStats:
     plan: list[str] = field(default_factory=list)
     # which substrate route executed the query: "" for the distributed
     # shard_map wrappers, "<substrate>-local" when a PI hit took the
-    # shard-local route (zero collectives in the lowered stages)
+    # shard-local route, "<substrate>-local-main" when a case-(i) chain ran
+    # the fused zero-collective route over the main index (DESIGN §11), and
+    # "<substrate>-degraded" when a dark shard demoted either fast route to
+    # the distributed path (DESIGN §9)
     route: str = ""
 
     @property
@@ -74,6 +78,20 @@ def _append_plan(rel_vars: tuple[Var, ...], q: TriplePattern
             append.append(c)
             out.append(v)
     return tuple(append), tuple(out)
+
+
+@dataclass(frozen=True)
+class _ChainPlan:
+    """Host-static description of a fully-local (case-(i)) query chain —
+    the unit the fused zero-collective main-index route executes in one
+    dispatch (DESIGN §11).  Shape-level only (no constants), so queries
+    differing only in constants share one memoized instance."""
+
+    first_spec: dsj.PatternSpec
+    first_keep: tuple[int, ...]
+    steps: tuple[dsj.ChainStep, ...]
+    join_vars: tuple[Var, ...]  # per-step join variable, for plan strings
+    out_vars: tuple[Var, ...]
 
 
 def step_descriptor(
@@ -150,6 +168,8 @@ class Executor:
         probe_backend: str = "auto",
         substrate=None,
         placement=None,
+        health=None,
+        local_chain: bool = True,
     ):
         from .placement import HashPlacement
         from .substrate import SingleDeviceSubstrate
@@ -164,6 +184,28 @@ class Executor:
             SingleDeviceSubstrate()
         self.sub.check_workers(n_workers)
         self.backend = self.sub.resolve_backend(probe_backend)
+        # fused zero-collective route for all-local (case-(i)) chains over
+        # the main index (DESIGN §11); ``health`` (a HealthState, optional)
+        # demotes it to the distributed path while a shard is dark, exactly
+        # like the engine demotes PI hits (DESIGN §9)
+        self.health = health
+        self.local_chain = local_chain
+        # chain-plan memo, keyed by the query's *shape* (specs + variable
+        # structure; constants excluded) — the warm fast path must not pay
+        # the per-step descriptor rebuild on every repeat.  Bounded like the
+        # planner memo: a stream of fresh shapes cannot grow it forever.
+        self._chain_memo: dict[tuple, _ChainPlan | None] = {}
+        self._chain_memo_cap = 4096
+        # device-resident stage-constant arrays, keyed by the ordered id
+        # tuple — repeated queries (the warm serving case) must not pay a
+        # host->device transfer per query.  Same bound/flush policy.
+        self._consts_memo: dict[tuple, jnp.ndarray] = {}
+        # shapes whose *staged* fallback entries are already compiled: a
+        # dark shard demotes the chain route mid-episode, and failover must
+        # be hitless (PR 7's zero-recompile episode invariant) — so the
+        # first healthy chain execution of a shape also runs the staged
+        # path once, silently, to populate its jit entries (DESIGN §11)
+        self._staged_warm: set[tuple] = set()
 
     # ------------------------------------------------------------ first match
     def _match_first(self, q: TriplePattern, cap: int, stats: QueryStats
@@ -174,13 +216,14 @@ class Executor:
             cols, valid, total = self.sub.match_first(
                 self.store, consts, spec, cap, backend=self.backend
             )
-            if int(total) <= cap:
+            t = host_total(total)
+            if t <= cap:
                 # keep one column per distinct variable (handles ?x p ?x)
                 keep, vars_ = q.distinct_var_cols()
                 if len(keep) != len(q.var_cols()):
                     cols = cols[..., list(keep)]
                 return Relation(cols, valid, vars_)
-            cap = quantize_capacity(max(cap * 2, int(total)))
+            cap = quantize_capacity(max(cap * 2, t))
             stats.n_retries += 1
         raise ExecutorError("match_first exceeded retry budget")
 
@@ -193,6 +236,7 @@ class Executor:
         pinned: Var | None,
         cap: int,
         stats: QueryStats,
+        comm: list,
     ) -> Relation:
         spec = dsj.PatternSpec.of(q)
         consts = dsj.pattern_consts(q)
@@ -210,9 +254,10 @@ class Executor:
                     self.store, rel.cols, rel.valid, consts, spec,
                     c1, c2, checks, append_cols, cap, backend=self.backend,
                 )
-                if int(total) <= cap:
+                t = host_total(total)
+                if t <= cap:
                     return Relation(cols, valid, out_vars)
-                cap = quantize_capacity(max(cap * 2, int(total)))
+                cap = quantize_capacity(max(cap * 2, t))
                 stats.n_retries += 1
             raise ExecutorError("local join exceeded retry budget")
 
@@ -227,13 +272,17 @@ class Executor:
             proj, pvalid, nuniq = self.sub.project_unique(
                 rel.cols, rel.valid, c1, cap_proj, backend=self.backend
             )
-            if int(nuniq) <= cap_proj:
+            nu = host_total(nuniq)
+            if nu <= cap_proj:
                 break
-            cap_proj = quantize_capacity(max(cap_proj * 2, int(nuniq)))
+            cap_proj = quantize_capacity(max(cap_proj * 2, nu))
             stats.n_retries += 1
         else:
             raise ExecutorError("projection exceeded retry budget")
 
+        # wire-cell counts stay on device (``comm``): the executor fetches
+        # the per-query sum once at stats finalization instead of syncing
+        # after every exchange
         if hash_mode:
             cap_peer = cap_proj
             # table fetched per call: a rebalance between queries swaps in a
@@ -245,16 +294,17 @@ class Executor:
                     proj, pvalid, cap_peer, backend=self.backend,
                     spec=pspec, table=ptable,
                 )
-                if int(maxb) <= cap_peer:
+                mb = host_total(maxb)
+                if mb <= cap_peer:
                     break
-                cap_peer = quantize_capacity(max(cap_peer * 2, int(maxb)))
+                cap_peer = quantize_capacity(max(cap_peer * 2, mb))
                 stats.n_retries += 1
             else:
                 raise ExecutorError("hash exchange exceeded retry budget")
-            stats.comm_cells += int(cells)
+            comm.append(cells)
         else:
             recv, rvalid, cells = self.sub.exchange_broadcast(proj, pvalid)
-            stats.comm_cells += int(cells)
+            comm.append(cells)
 
         cap_flat = cap_cand = quantize_capacity(cap)
         for _ in range(_MAX_RETRIES):
@@ -262,27 +312,153 @@ class Executor:
                 self.store, recv, rvalid, consts, spec, c2, cap_flat, cap_cand,
                 backend=self.backend,
             )
-            if int(maxf) <= cap_flat and int(maxc) <= cap_cand:
+            mf, mc = host_total(maxf), host_total(maxc)
+            if mf <= cap_flat and mc <= cap_cand:
                 break
-            if int(maxf) > cap_flat:
-                cap_flat = quantize_capacity(max(cap_flat * 2, int(maxf)))
-            if int(maxc) > cap_cand:
-                cap_cand = quantize_capacity(max(cap_cand * 2, int(maxc)))
+            if mf > cap_flat:
+                cap_flat = quantize_capacity(max(cap_flat * 2, mf))
+            if mc > cap_cand:
+                cap_cand = quantize_capacity(max(cap_cand * 2, mc))
             stats.n_retries += 1
         else:
             raise ExecutorError("probe/reply exceeded retry budget")
-        stats.comm_cells += int(cells)
+        comm.append(cells)
 
         for _ in range(_MAX_RETRIES):
             cols, valid, total = self.sub.finalize_join(
                 rel.cols, rel.valid, cand, cvalid, c1, c2, checks,
                 append_cols, cap, backend=self.backend,
             )
-            if int(total) <= cap:
+            t = host_total(total)
+            if t <= cap:
                 return Relation(cols, valid, out_vars)
-            cap = quantize_capacity(max(cap * 2, int(total)))
+            cap = quantize_capacity(max(cap * 2, t))
             stats.n_retries += 1
         raise ExecutorError("finalize exceeded retry budget")
+
+    # --------------------------------------------- fused case-(i) chain route
+    def _chain_plan(
+        self, query: Query, ordering: list[int], join_vars: list[Var],
+        pinned: Var | None,
+    ) -> tuple[tuple | None, _ChainPlan | None]:
+        """The whole-query chain descriptor when *every* join is case (i)
+        (subject-star under a local-join-safe placement) — else None.
+
+        Runs the same ``step_descriptor`` the sequential path and the
+        batcher run, so route eligibility can never drift from the per-step
+        case selection.  Zero-step (single-pattern) queries are trivially
+        eligible: they have no join to communicate for.  Returns
+        ``(shape_key, plan)`` — the key also guards the staged-fallback
+        pre-warm."""
+        if not self.local_chain:
+            return None, None
+        key = (
+            tuple(
+                tuple(t if isinstance(t, Var) else None
+                      for t in (p.s, p.p, p.o))
+                for p in (query.patterns[i] for i in ordering)
+            ),
+            tuple(join_vars), pinned,
+        )
+        if key in self._chain_memo:
+            return key, self._chain_memo[key]
+        q1 = query.patterns[ordering[0]]
+        keep, first_vars = q1.distinct_var_cols()
+        rel_vars = first_vars
+        steps: list[dsj.ChainStep] = []
+        out_vars = first_vars
+        plan: _ChainPlan | None = None
+        for step, idx in enumerate(ordering[1:]):
+            qj = query.patterns[idx]
+            kind, c1, c2, checks, append_cols, out_vars = step_descriptor(
+                rel_vars, qj, join_vars[step], pinned, self.locality_aware,
+                self.pinned_opt, self.placement.local_join_safe,
+            )
+            if kind != "local":
+                break
+            steps.append(dsj.ChainStep(dsj.PatternSpec.of(qj), c1, c2,
+                                       checks, append_cols))
+            rel_vars = out_vars
+        else:  # every join (or none: single pattern) is case (i)
+            plan = _ChainPlan(dsj.PatternSpec.of(q1), tuple(keep),
+                              tuple(steps), tuple(join_vars),
+                              tuple(out_vars))
+        if len(self._chain_memo) >= self._chain_memo_cap:
+            self._chain_memo.clear()  # rare full flush beats an LRU walk
+        self._chain_memo[key] = plan
+        return key, plan
+
+    def _execute_local_chain(
+        self, patterns: list[TriplePattern], pinned: Var | None,
+        chain: _ChainPlan, cap: int, stats: QueryStats,
+    ) -> tuple[Relation, QueryStats]:
+        """Speculative one-sync execution of a fused case-(i) chain.
+
+        All stages run at their current capacity classes in ONE dispatch;
+        the stacked per-stage overflow totals are fetched in ONE host sync
+        at chain end.  On overflow, only the *first* overflowed stage has
+        trustworthy inputs (everything before it was already accepted), so
+        its capacity class grows — same ladder as the per-stage retry loops,
+        so ``n_retries`` and the warmed capacity classes are identical to
+        the sequential path — and the chain re-runs from that stage, seeded
+        by the last accepted intermediate.  Warm queries overflow nowhere:
+        one dispatch, zero cross-shard collectives, one host sync."""
+        # one host->device transfer for all stage constants (stacking
+        # per-pattern device arrays would cost a dispatch per pattern);
+        # memoized so repeated queries pay no transfer at all
+        ckey = tuple(-1 if isinstance(t, Var) else t.id
+                     for p in patterns for t in (p.s, p.p, p.o))
+        consts = self._consts_memo.get(ckey)
+        if consts is None:
+            consts = jnp.asarray(np.array(ckey, dtype=np.int32)
+                                 .reshape(len(patterns), 3))
+            if len(self._consts_memo) >= self._chain_memo_cap:
+                self._consts_memo.clear()
+            self._consts_memo[ckey] = consts
+        n_stages = 1 + len(chain.steps)
+        caps = [cap] * n_stages
+        tries = [0] * n_stages
+        rels: list = [None] * n_stages
+        start = 0
+        while True:
+            if start == 0:
+                out, totals = self.sub.local_chain(
+                    self.store, consts, chain.first_spec, chain.first_keep,
+                    chain.steps, tuple(caps), backend=self.backend,
+                )
+                rels[:] = list(out)
+            else:
+                seed_cols, seed_valid = rels[start - 1]
+                out, totals = self.sub.local_chain_from(
+                    self.store, seed_cols, seed_valid, consts[start:],
+                    chain.steps[start - 1:], tuple(caps[start:]),
+                    backend=self.backend,
+                )
+                rels[start:] = list(out)
+            tots = host_chain_totals(totals)  # THE host sync
+            bad = next(
+                (j for j in range(start, n_stages)
+                 if int(tots[j - start]) > caps[j]),
+                None,
+            )
+            if bad is None:
+                break
+            stats.n_retries += 1
+            tries[bad] += 1
+            if tries[bad] >= _MAX_RETRIES:
+                raise ExecutorError("local chain exceeded retry budget")
+            caps[bad] = quantize_capacity(
+                max(caps[bad] * 2, int(tots[bad - start]))
+            )
+            start = bad
+        stats.plan.append(f"match {patterns[0]} (pinned={pinned})")
+        for v in chain.join_vars:
+            stats.plan.append(f"local-join on {v}")
+        stats.n_local_joins += len(chain.steps)
+        stats.mode = "parallel"
+        stats.route = f"{self.sub.name}-local-main"
+        cols, valid = rels[-1]
+        return Relation(cols, valid, chain.out_vars), stats
 
     # -------------------------------------------------------------- top level
     def execute(
@@ -296,17 +472,53 @@ class Executor:
 
         ``join_vars[i]`` is the join variable for step i (joining pattern
         ordering[i+1] into the running intermediate result).
+
+        All-local (case-(i)) chains take the fused zero-collective route
+        over the main index unless a shard is dark, in which case they
+        demote to the staged distributed path below — bit-identical
+        answers, with the ``"<substrate>-degraded"`` route tag (DESIGN §9).
         """
         stats = QueryStats()
         cap = quantize_capacity(capacity or query.capacity)
         q1 = query.patterns[ordering[0]]
-        rel = self._match_first(q1, cap, stats)
         pinned = q1.s if isinstance(q1.s, Var) else None
+        ckey, chain = self._chain_plan(query, ordering, join_vars, pinned)
+        if chain is not None:
+            if self.health is None or not self.health.degraded:
+                if self.health is not None and \
+                        (ckey, cap) not in self._staged_warm:
+                    # hitless failover: compile the staged fallback now
+                    # (once per shape), not mid-episode when a shard dies
+                    self._staged_warm.add((ckey, cap))
+                    self._execute_staged(query, ordering, join_vars,
+                                         pinned, cap, QueryStats())
+                return self._execute_local_chain(
+                    [query.patterns[i] for i in ordering], pinned, chain,
+                    cap, stats)
+            stats.route = f"{self.sub.name}-degraded"
+        return self._execute_staged(query, ordering, join_vars, pinned,
+                                    cap, stats)
+
+    def _execute_staged(
+        self, query: Query, ordering: list[int], join_vars: list[Var],
+        pinned: Var | None, cap: int, stats: QueryStats,
+    ) -> tuple[Relation, QueryStats]:
+        """The per-stage path: match-first, then one (possibly distributed)
+        join step per pattern, with the capacity ladder per stage."""
+        q1 = query.patterns[ordering[0]]
+        rel = self._match_first(q1, cap, stats)
         stats.plan.append(f"match {q1} (pinned={pinned})")
 
+        comm: list = []
         for step, idx in enumerate(ordering[1:]):
             qj = query.patterns[idx]
-            rel = self._join_step(rel, qj, join_vars[step], pinned, cap, stats)
+            rel = self._join_step(rel, qj, join_vars[step], pinned, cap,
+                                  stats, comm)
+        if comm:
+            acc = comm[0]
+            for c in comm[1:]:
+                acc = acc + c
+            stats.comm_cells += int(host_fetch(acc))
 
         if stats.n_dsj == 0:
             stats.mode = "parallel"
@@ -338,13 +550,37 @@ class Executor:
             consts_j = jnp.concatenate([consts_j, pad])
         stats = [QueryStats() for _ in range(b)]
 
+        # all-local bucket -> the fused zero-collective chain route, unless
+        # a shard is dark (then the staged path runs, with every member
+        # route-tagged as demoted — mirroring ``execute``)
+        if self.local_chain and bplan.local_chain:
+            if self.health is None or not self.health.degraded:
+                if self.health is not None:
+                    bkey = ("batch", bplan.first_spec, bplan.first_keep,
+                            tuple(bplan.steps), bplan.capacity,
+                            consts_j.shape[0])
+                    if bkey not in self._staged_warm:
+                        # hitless failover: compile the staged batch
+                        # fallback once per bucket shape (DESIGN §11)
+                        self._staged_warm.add(bkey)
+                        self._execute_batch_staged(
+                            bplan, consts_j, b,
+                            [QueryStats() for _ in range(b)])
+                return self._execute_batch_local_chain(bplan, consts_j, b,
+                                                       stats)
+            for st in stats:
+                st.route = f"{self.sub.name}-degraded"
+        return self._execute_batch_staged(bplan, consts_j, b, stats)
+
+    def _execute_batch_staged(self, bplan, consts_j, b, stats):
+        """The per-stage batched path (see ``execute_batch``)."""
         cap = bplan.capacity
         for _ in range(_MAX_RETRIES):
             cols, valid, totals = self.sub.match_first_batch(
                 self.store, consts_j[:, 0], bplan.first_spec, cap,
                 backend=self.backend,
             )
-            t = int(jnp.max(totals))
+            t = host_total(totals)
             if t <= cap:
                 break
             cap = quantize_capacity(max(cap * 2, t))
@@ -359,6 +595,7 @@ class Executor:
 
         rel_cols, rel_valid = cols, valid
         n_dsj = 0
+        comm: list = []  # per-stage (B,) device cell counts, fetched once
         for step, sp in enumerate(bplan.steps):
             qc = consts_j[:, 1 + step]
             if sp.kind == "local":
@@ -368,20 +605,90 @@ class Executor:
             else:
                 n_dsj += 1
                 rel_cols, rel_valid = self._batch_dsj_step(
-                    sp, rel_cols, rel_valid, qc, bplan.capacity, stats
+                    sp, rel_cols, rel_valid, qc, bplan.capacity, stats, comm
                 )
+        if comm:
+            acc = comm[0]
+            for c in comm[1:]:
+                acc = acc + c
+            cells_np = host_fetch(acc)
+            for i in range(b):
+                stats[i].comm_cells += int(cells_np[i])
 
         mode = "parallel" if n_dsj == 0 else "distributed"
         out_vars = bplan.steps[-1].out_vars if bplan.steps else bplan.first_vars
         # one host transfer + B views beats 2*B device-slice dispatches by
         # orders of magnitude; results are final, so numpy backing is fine
-        cols_np = np.asarray(rel_cols)
-        valid_np = np.asarray(rel_valid)
+        cols_np = host_fetch(rel_cols)
+        valid_np = host_fetch(rel_valid)
         rels = []
         for i in range(b):
             stats[i].mode = mode
             rels.append(Relation(cols_np[i], valid_np[i], out_vars))
         return rels, stats
+
+    def _execute_batch_local_chain(self, bplan, consts_j, b, stats):
+        """Batched speculative chain: the whole shape bucket in one
+        dispatch, one host sync.  Same protocol as ``_execute_local_chain``
+        with per-stage maxima taken across the batch (and the shards) —
+        capacity classes are shared across the bucket exactly like the
+        staged batch retry loops."""
+        steps = tuple(
+            dsj.ChainStep(sp.spec, sp.c1, sp.c2, sp.checks, sp.append_cols)
+            for sp in bplan.steps
+        )
+        n_stages = 1 + len(steps)
+        caps = [bplan.capacity] * n_stages
+        tries = [0] * n_stages
+        rels: list = [None] * n_stages
+        start = 0
+        while True:
+            if start == 0:
+                out, totals = self.sub.local_chain_batch(
+                    self.store, consts_j, bplan.first_spec, bplan.first_keep,
+                    steps, tuple(caps), backend=self.backend,
+                )
+                rels[:] = list(out)
+            else:
+                seed_cols, seed_valid = rels[start - 1]
+                out, totals = self.sub.local_chain_from_batch(
+                    self.store, seed_cols, seed_valid, consts_j[:, start:],
+                    steps[start - 1:], tuple(caps[start:]),
+                    backend=self.backend,
+                )
+                rels[start:] = list(out)
+            tots = host_chain_totals(totals)  # THE host sync
+            bad = next(
+                (j for j in range(start, n_stages)
+                 if int(tots[j - start]) > caps[j]),
+                None,
+            )
+            if bad is None:
+                break
+            for st in stats:
+                st.n_retries += 1
+            tries[bad] += 1
+            if tries[bad] >= _MAX_RETRIES:
+                raise ExecutorError("batched local chain exceeded retries")
+            caps[bad] = quantize_capacity(
+                max(caps[bad] * 2, int(tots[bad - start]))
+            )
+            start = bad
+        out_vars = bplan.steps[-1].out_vars if bplan.steps else bplan.first_vars
+        cols, valid = rels[-1]
+        cols_np = host_fetch(cols)
+        valid_np = host_fetch(valid)
+        rels_out = []
+        for i in range(b):
+            st = stats[i]
+            st.plan.append(f"match[batch={b}] {bplan.first_spec}")
+            for sp in bplan.steps:
+                st.plan.append(f"local-join on {sp.join_var}")
+            st.n_local_joins += len(steps)
+            st.mode = "parallel"
+            st.route = f"{self.sub.name}-local-main"
+            rels_out.append(Relation(cols_np[i], valid_np[i], out_vars))
+        return rels_out, stats
 
     def _batch_local_step(self, sp, rel_cols, rel_valid, qc, cap, stats):
         for st in stats:
@@ -392,7 +699,7 @@ class Executor:
                 self.store, rel_cols, rel_valid, qc, sp.spec, sp.c1, sp.c2,
                 sp.checks, sp.append_cols, cap, backend=self.backend,
             )
-            t = int(jnp.max(totals))
+            t = host_total(totals)
             if t <= cap:
                 return cols, valid
             cap = quantize_capacity(max(cap * 2, t))
@@ -400,8 +707,7 @@ class Executor:
                 st.n_retries += 1
         raise ExecutorError("batched local join exceeded retry budget")
 
-    def _batch_dsj_step(self, sp, rel_cols, rel_valid, qc, cap, stats):
-        b = len(stats)
+    def _batch_dsj_step(self, sp, rel_cols, rel_valid, qc, cap, stats, comm):
         hash_mode = sp.kind == "hash"
         for st in stats:
             st.n_dsj += 1
@@ -414,7 +720,7 @@ class Executor:
             proj, pvalid, nuniq = self.sub.project_unique_batch(
                 rel_cols, rel_valid, sp.c1, cap_proj, backend=self.backend
             )
-            nu = int(jnp.max(nuniq))
+            nu = host_total(nuniq)
             if nu <= cap_proj:
                 break
             cap_proj = quantize_capacity(max(cap_proj * 2, nu))
@@ -432,7 +738,7 @@ class Executor:
                     proj, pvalid, cap_peer, backend=self.backend,
                     spec=pspec, table=ptable,
                 )
-                mb = int(jnp.max(maxb))
+                mb = host_total(maxb)
                 if mb <= cap_peer:
                     break
                 cap_peer = quantize_capacity(max(cap_peer * 2, mb))
@@ -442,9 +748,7 @@ class Executor:
                 raise ExecutorError("batched hash exchange exceeded retries")
         else:
             recv, rvalid, cells = self.sub.exchange_broadcast_batch(proj, pvalid)
-        cells_np = np.asarray(cells)
-        for i in range(b):
-            stats[i].comm_cells += int(cells_np[i])
+        comm.append(cells)  # (B,) device array — fetched once per batch
 
         cap_flat = cap_cand = quantize_capacity(cap)
         for _ in range(_MAX_RETRIES):
@@ -452,7 +756,7 @@ class Executor:
                 self.store, recv, rvalid, qc, sp.spec, sp.c2, cap_flat,
                 cap_cand, backend=self.backend,
             )
-            mf, mc = int(jnp.max(maxf)), int(jnp.max(maxc))
+            mf, mc = host_total(maxf), host_total(maxc)
             if mf <= cap_flat and mc <= cap_cand:
                 break
             if mf > cap_flat:
@@ -463,16 +767,14 @@ class Executor:
                 st.n_retries += 1
         else:
             raise ExecutorError("batched probe/reply exceeded retry budget")
-        cells_np = np.asarray(cells)
-        for i in range(b):
-            stats[i].comm_cells += int(cells_np[i])
+        comm.append(cells)
 
         for _ in range(_MAX_RETRIES):
             cols, valid, totals = self.sub.finalize_join_batch(
                 rel_cols, rel_valid, cand, cvalid, sp.c1, sp.c2, sp.checks,
                 sp.append_cols, cap, backend=self.backend,
             )
-            t = int(jnp.max(totals))
+            t = host_total(totals)
             if t <= cap:
                 return cols, valid
             cap = quantize_capacity(max(cap * 2, t))

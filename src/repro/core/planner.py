@@ -1,8 +1,10 @@
 """Locality-aware query planning: DP + cost model (paper §4.2, §4.3).
 
 States are identified by the *set* of joined patterns; each keeps the
-cheapest ordering (ties broken by cumulative cardinality, as in the paper),
-the estimated per-variable binding cardinalities B(v), and the pinned
+cheapest ordering (ties broken first by the number of synchronizing steps —
+a zero-cost case-(i) step runs on the fused zero-collective chain route,
+DESIGN §11 — then by cumulative cardinality, as in the paper), the
+estimated per-variable binding cardinalities B(v), and the pinned
 subject.  The cost of expanding a state with pattern p_j follows §4.3:
 
   cost = 0                                          c_j subject & pinned
@@ -56,6 +58,11 @@ class _State:
     cards: tuple[float, ...]
     bindings: dict[Var, float] = field(default_factory=dict)
     pinned: Var | None = None
+    # synchronizing (non-case-(i)) steps.  A zero-cost step is a shard-local
+    # join the fused chain route executes with no exchange and no host sync
+    # (DESIGN §11); every other step pays at least one.  Among equal-cost
+    # orderings the cheaper one at runtime is the one with fewer such steps.
+    n_sync: int = 0
 
 
 class LocalityAwarePlanner:
@@ -202,6 +209,7 @@ class LocalityAwarePlanner:
             cards=st.cards + (card,),
             bindings=new_b,
             pinned=st.pinned,
+            n_sync=st.n_sync + (0 if step_cost == 0.0 else 1),
         )
 
     # --------------------------------------------------------------- DP loop
@@ -255,10 +263,13 @@ class LocalityAwarePlanner:
                         continue
                     nk = key | {j}
                     cur = best.get(nk)
-                    if (
-                        cur is None
-                        or ns_.cost < cur.cost
-                        or (ns_.cost == cur.cost and ns_.cum_card < cur.cum_card)
+                    # lexicographic (cost, n_sync, cum_card): the paper's
+                    # tie-break on cumulative cardinality, refined to first
+                    # prefer orderings with fewer synchronizing steps — an
+                    # all-local ordering rides the one-sync fused chain
+                    if cur is None or (
+                        (ns_.cost, ns_.n_sync, ns_.cum_card)
+                        < (cur.cost, cur.n_sync, cur.cum_card)
                     ):
                         best[nk] = ns_
                         if nk not in nxt:

@@ -62,6 +62,7 @@ path.
 """
 from __future__ import annotations
 
+from contextlib import contextmanager
 from functools import partial
 
 import jax
@@ -77,7 +78,8 @@ from .relation import Relation
 from .triples import ShardedTripleStore, match_ranges
 
 __all__ = ["Substrate", "SingleDeviceSubstrate", "MeshSubstrate",
-           "WORKER_AXIS", "host_total"]
+           "WORKER_AXIS", "host_total", "host_chain_totals", "host_fetch",
+           "trace_host_syncs"]
 
 WORKER_AXIS = "data"
 
@@ -141,6 +143,55 @@ class Substrate:
     # reduce it with ``host_total``.
     match_first_local = staticmethod(dsj.match_first)
     local_probe_join_local = staticmethod(dsj.local_probe_join)
+    # Fused case-(i) chains (main-index subject stars, DESIGN.md §11): whole
+    # query in one dispatch.  Single-device, the chain functions ARE the
+    # fast route — per-stage totals come back stacked and the host syncs
+    # once per query, exactly like the mesh wrappers below.
+    local_chain = staticmethod(dsj.local_chain)
+    local_chain_from = staticmethod(dsj.local_chain_from)
+    local_chain_batch = staticmethod(dsj.local_chain_batch)
+    local_chain_from_batch = staticmethod(dsj.local_chain_from_batch)
+
+
+# ---------------------------------------------------------------------------
+# Host sync chokepoints.  Every device->host transfer the executor performs
+# funnels through one of the three helpers below, so the roofline audit (and
+# the one-sync-per-warm-query acceptance test) can count actual syncs by
+# installing a trace — no guessing from profiler output.
+# ---------------------------------------------------------------------------
+class HostSyncTrace:
+    """Counter of device->host transfers, installed by ``trace_host_syncs``."""
+
+    def __init__(self) -> None:
+        self.host_transfers = 0
+
+
+_ACTIVE_TRACE: HostSyncTrace | None = None
+
+
+@contextmanager
+def trace_host_syncs():
+    """Count every host transfer issued inside the block.
+
+    Usage::
+
+        with trace_host_syncs() as t:
+            engine.query(q)
+        assert t.host_transfers == 1   # warm fast-path query
+    """
+    global _ACTIVE_TRACE
+    trace = HostSyncTrace()
+    prev = _ACTIVE_TRACE
+    _ACTIVE_TRACE = trace
+    try:
+        yield trace
+    finally:
+        _ACTIVE_TRACE = prev
+
+
+def _note_host_transfer() -> None:
+    if _ACTIVE_TRACE is not None:
+        _ACTIVE_TRACE.host_transfers += 1
 
 
 def host_total(total) -> int:
@@ -150,7 +201,28 @@ def host_total(total) -> int:
     shard-local stages return the per-shard maxima as a ``(D,)`` vector and
     skip the on-device reduction — the host takes the max during the
     overflow-retry check, a sync point it hits regardless."""
+    _note_host_transfer()
     return int(np.max(np.asarray(total)))
+
+
+def host_chain_totals(totals) -> np.ndarray:
+    """One host sync for a whole fused chain: per-stage overflow maxima.
+
+    ``totals`` is stage-major — (S,) single-device, (S, D) shard-local mesh,
+    (S, B) batched single-device or (S, B, D) batched mesh.  Everything
+    after the stage axis is reduced away (capacity classes are shared across
+    the batch, like the sequential batch retry), so the result is always an
+    (S,) int vector.  This is THE one device->host transfer of a warm
+    fast-path query."""
+    _note_host_transfer()
+    arr = np.asarray(totals)
+    return arr.reshape(arr.shape[0], -1).max(axis=1)
+
+
+def host_fetch(x) -> np.ndarray:
+    """Materialize a device array on the host (result/accounting fetch)."""
+    _note_host_transfer()
+    return np.asarray(x)
 
 
 class SingleDeviceSubstrate(Substrate):
@@ -289,6 +361,38 @@ class MeshSubstrate(Substrate):
             spec=spec, join_col_rel=join_col_rel, probe_col=probe_col,
             shared_checks=shared_checks, append_cols=append_cols,
             cap_out=cap_out, backend=backend,
+        )
+
+    # Fused case-(i) chains: one shard_map body per query shape covering
+    # match_first + every local join — zero cross-shard collectives, totals
+    # come back as a P('data')-sharded stage-major matrix for the host's
+    # single end-of-chain sync (``host_chain_totals``).
+    def local_chain(self, store, consts, first_spec, first_keep, steps, caps,
+                    backend="searchsorted"):
+        return _local_chain_shardlocal(
+            self.mesh, self.axis, store, consts, first_spec=first_spec,
+            first_keep=first_keep, steps=steps, caps=caps, backend=backend,
+        )
+
+    def local_chain_from(self, store, rel_cols, rel_valid, consts, steps,
+                         caps, backend="searchsorted"):
+        return _local_chain_from_shardlocal(
+            self.mesh, self.axis, store, rel_cols, rel_valid, consts,
+            steps=steps, caps=caps, backend=backend,
+        )
+
+    def local_chain_batch(self, store, consts, first_spec, first_keep, steps,
+                          caps, backend="searchsorted"):
+        return _local_chain_batch_shardlocal(
+            self.mesh, self.axis, store, consts, first_spec=first_spec,
+            first_keep=first_keep, steps=steps, caps=caps, backend=backend,
+        )
+
+    def local_chain_from_batch(self, store, rel_cols, rel_valid, consts,
+                               steps, caps, backend="searchsorted"):
+        return _local_chain_from_batch_shardlocal(
+            self.mesh, self.axis, store, rel_cols, rel_valid, consts,
+            steps=steps, caps=caps, backend=backend,
         )
 
     def match_first_batch(self, store, consts, spec, cap_out,
@@ -615,6 +719,74 @@ def _local_probe_join_shardlocal(mesh, axis, store, rel_cols, rel_valid,
     )
 
 
+# ------------------------------------------- fused chain wrappers (§11)
+# The whole case-(i) query — match_first plus every local join — as ONE
+# shard_map body with zero cross-shard collectives: every stage is
+# per-worker local and the per-stage per-shard overflow totals leave as a
+# P('data')-sharded stage-major matrix ((S, D), batched (S, B, D)) for the
+# host's single end-of-chain sync.  The *_from variants are the speculative
+# retry's suffix restart, seeded from the last accepted intermediate.
+@partial(jax.jit, static_argnames=("mesh", "axis", "first_spec", "first_keep",
+                                   "steps", "caps", "backend"))
+def _local_chain_shardlocal(mesh, axis, store, consts, first_spec, first_keep,
+                            steps, caps, backend):
+    def body(store, consts):
+        rels, totals = dsj.local_chain(store, consts, first_spec, first_keep,
+                                       steps, caps, backend=backend)
+        return rels, totals[:, None]
+
+    n_stages = 1 + len(steps)
+    rel_specs = tuple((_pw(axis), _pw(axis)) for _ in range(n_stages))
+    return _wrap(body, mesh, axis, (_pw(axis), _PR),
+                 (rel_specs, _pb(axis)))(store, consts)
+
+
+@partial(jax.jit, static_argnames=("mesh", "axis", "steps", "caps", "backend"))
+def _local_chain_from_shardlocal(mesh, axis, store, rel_cols, rel_valid,
+                                 consts, steps, caps, backend):
+    def body(store, rel_cols, rel_valid, consts):
+        rels, totals = dsj.local_chain_from(store, rel_cols, rel_valid,
+                                            consts, steps, caps,
+                                            backend=backend)
+        return rels, totals[:, None]
+
+    rel_specs = tuple((_pw(axis), _pw(axis)) for _ in steps)
+    return _wrap(body, mesh, axis, (_pw(axis), _pw(axis), _pw(axis), _PR),
+                 (rel_specs, _pb(axis)))(store, rel_cols, rel_valid, consts)
+
+
+@partial(jax.jit, static_argnames=("mesh", "axis", "first_spec", "first_keep",
+                                   "steps", "caps", "backend"))
+def _local_chain_batch_shardlocal(mesh, axis, store, consts, first_spec,
+                                  first_keep, steps, caps, backend):
+    def body(store, consts):
+        rels, totals = dsj.local_chain_batch(store, consts, first_spec,
+                                             first_keep, steps, caps,
+                                             backend=backend)
+        return rels, totals[:, :, None]
+
+    n_stages = 1 + len(steps)
+    rel_specs = tuple((_pb(axis), _pb(axis)) for _ in range(n_stages))
+    totals_spec = PartitionSpec(None, None, axis)
+    return _wrap(body, mesh, axis, (_pw(axis), _PR),
+                 (rel_specs, totals_spec))(store, consts)
+
+
+@partial(jax.jit, static_argnames=("mesh", "axis", "steps", "caps", "backend"))
+def _local_chain_from_batch_shardlocal(mesh, axis, store, rel_cols, rel_valid,
+                                       consts, steps, caps, backend):
+    def body(store, rel_cols, rel_valid, consts):
+        rels, totals = dsj.local_chain_from_batch(store, rel_cols, rel_valid,
+                                                  consts, steps, caps,
+                                                  backend=backend)
+        return rels, totals[:, :, None]
+
+    rel_specs = tuple((_pb(axis), _pb(axis)) for _ in steps)
+    totals_spec = PartitionSpec(None, None, axis)
+    return _wrap(body, mesh, axis, (_pw(axis), _pb(axis), _pb(axis), _PR),
+                 (rel_specs, totals_spec))(store, rel_cols, rel_valid, consts)
+
+
 # ------------------------------------------------------- batched variants
 @partial(jax.jit, static_argnames=("mesh", "axis", "spec", "cap_out",
                                    "backend"))
@@ -796,4 +968,8 @@ SHARDED_STAGE_FNS = (
     _local_probe_join_batch_sharded,
     _match_first_shardlocal,
     _local_probe_join_shardlocal,
+    _local_chain_shardlocal,
+    _local_chain_from_shardlocal,
+    _local_chain_batch_shardlocal,
+    _local_chain_from_batch_shardlocal,
 )

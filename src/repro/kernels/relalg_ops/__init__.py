@@ -71,3 +71,28 @@ def _unique_compact(values, valid, out_cap, pad):
     if kernels_active():
         return unique_compact_pallas(values, valid, out_cap, pad)
     return _relalg.unique_compact_fused(values, valid, out_cap, pad)
+
+
+# Fused case-(i) chain bodies (main-index subject stars, DESIGN.md §11).
+# The chain is a composition of stages whose primitives already dispatch
+# through this registry, so the pallas impl reuses the reference composition
+# from dsj with the backend name threaded into every primitive — on TPU the
+# whole chain runs Pallas kernels end to end inside one shard_map body.  A
+# future optimization can re-register a true single-grid-pass kernel here
+# (probe -> expand -> filter fused) without touching any caller.
+@_backend.register_impl("local_chain", "pallas")
+def _local_chain(store, consts, first_spec, first_keep, steps, caps,
+                 backend):
+    from repro.core.dsj import _local_chain_body
+
+    return _local_chain_body(store, consts, first_spec, first_keep, steps,
+                             caps, backend)
+
+
+@_backend.register_impl("local_chain_from", "pallas")
+def _local_chain_from(store, rel_cols, rel_valid, consts, steps, caps,
+                      backend):
+    from repro.core.dsj import _local_chain_from_body
+
+    return _local_chain_from_body(store, rel_cols, rel_valid, consts, steps,
+                                  caps, backend)

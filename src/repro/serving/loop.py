@@ -431,8 +431,8 @@ class ServeLoop:
     def _finish(self, req: Request, rel, qstats, dt: float,
                 demoted: bool) -> None:
         if demoted:
+            # tag only — record_served counts demotions by route suffix
             qstats.route = f"{self.engine.substrate.name}-degraded"
-            self.engine.report.n_degraded += 1
         now = self.clock.now()
         latency = now - req.arrival_s
         late = now > req.deadline_s + 1e-12

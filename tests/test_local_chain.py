@@ -1,0 +1,210 @@
+"""Fused main-index chain route (ISSUE 9 tentpole), in-process part.
+
+The mesh-level claims (zero-collective HLO, 8 real shards) live in
+tests/test_substrate_mesh.py::test_mesh8_main_index_chain_route; here the
+single-device substrate exercises the same code path cheaply:
+
+  * route selection — a subject-star query over the main index reports
+    ``route == "single-local-main"``; a query with any non-case-(i) join
+    keeps the staged distributed route;
+  * bit-parity of answers, per-query comm accounting and report counters
+    vs a chain-disabled twin (``local_chain=False``), sequentially and
+    through ``query_batch``;
+  * the one-sync invariant: a warm chain query performs exactly one
+    device->host transfer (``trace_host_syncs``);
+  * speculative-retry parity: the suffix-restart ladder performs exactly
+    as many retries as the per-stage ladders of the staged path, and the
+    final capacities agree;
+  * degraded demotion: a dark shard demotes the chain to the staged route
+    (``"single-degraded"``), counted once in ``report.n_degraded``, and
+    recovery restores the fast route;
+  * ``BatchPlan.local_chain`` bucket eligibility.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (x64 on, as in production)
+
+from repro.core import substrate as sb
+from repro.core.engine import AdHashEngine
+from repro.data.synthetic_rdf import lubm_like, lubm_queries
+
+from reference import match_query
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_compile_cache():
+    """This module compiles twin engines (chain + staged fallback prewarm)
+    for many query shapes; release the executables at module end so the
+    process-wide XLA footprint stays where the rest of the suite left it."""
+    yield
+    jax.clear_caches()
+
+_DICT, _TRIPLES = lubm_like(n_universities=2, depts_per_univ=2,
+                            profs_per_dept=2, students_per_prof=3)
+_QS = lubm_queries(_DICT)
+_KW = dict(adaptive=True, frequency_threshold=100, capacity=256)
+
+
+def _twin_engines(**extra):
+    kw = {**_KW, **extra}
+    return (AdHashEngine(_TRIPLES, 4, dictionary=_DICT, **kw),
+            AdHashEngine(_TRIPLES, 4, dictionary=_DICT, local_chain=False,
+                         **kw))
+
+
+def _star(seed=1):
+    return _QS["q1"].instantiate(np.random.default_rng(seed))
+
+
+# ------------------------------------------------------------------ routing
+def test_chain_route_selected_for_subject_star():
+    eng, _ = _twin_engines()
+    rel, st = eng.query(_star())
+    assert st.route == "single-local-main"
+    assert st.mode == "parallel"
+    assert st.comm_cells == 0
+    assert st.n_local_joins == 1 and st.n_dsj == 0
+    got = set(map(tuple, rel.project_to(_star().vars)))
+    assert got == match_query(_TRIPLES, _star())
+
+
+def test_non_local_join_keeps_staged_route():
+    eng, _ = _twin_engines()
+    q7 = _QS["q7"].instantiate(np.random.default_rng(2))  # object-object
+    _, st = eng.query(q7)
+    assert st.n_dsj > 0
+    assert not st.route.endswith("-local-main")
+
+
+# ------------------------------------------------------------------- parity
+def test_chain_parity_sequential_all_templates():
+    eng, ref = _twin_engines()
+    for name, t in _QS.items():
+        for i in range(2):
+            q = t.instantiate(np.random.default_rng(10 + i))
+            r1, s1 = eng.query(q)
+            r2, s2 = ref.query(q)
+            assert r1.to_set() == r2.to_set(), name
+            assert s1.comm_cells == s2.comm_cells, name
+            assert s1.mode == s2.mode, name
+    assert eng.report.comm_cells == ref.report.comm_cells
+    assert eng.report.n_parallel == ref.report.n_parallel
+    assert eng.report.n_distributed == ref.report.n_distributed
+
+
+def test_chain_parity_batched():
+    eng, ref = _twin_engines()
+    batch = [_QS["q1"].instantiate(np.random.default_rng(i))
+             for i in range(8)]
+    out = eng.query_batch(list(batch))
+    out_ref = ref.query_batch(list(batch))
+    for (r1, s1), (r2, s2) in zip(out, out_ref):
+        assert r1.to_set() == r2.to_set()
+        assert s1.comm_cells == s2.comm_cells
+    # the multi-member shape buckets rode the fused batched chain
+    assert any(s.route == "single-local-main" for _, s in out)
+    # and adaptivity state is untouched by the route change
+    assert eng.pattern_index.fingerprint() == ref.pattern_index.fingerprint()
+
+
+# ---------------------------------------------------------------- one sync
+def test_warm_chain_query_is_one_host_sync():
+    eng, _ = _twin_engines()
+    q = _star()
+    eng.query(q)  # warm: compile + settle capacity classes
+    with sb.trace_host_syncs() as tr:
+        _, st = eng.query(q)
+    assert st.route == "single-local-main"
+    assert st.n_retries == 0
+    assert tr.host_transfers == 1, tr.host_transfers
+
+
+# ------------------------------------------------------------- retry ladder
+def test_speculative_retry_parity_with_staged_ladder():
+    """The suffix-restart ladder must retry exactly as often as the staged
+    path's per-stage ladders — capacity growth is driven by the same exact
+    totals in both, so the jit cache key space stays identical."""
+    from repro.core.query import Const, Query, TriplePattern, Var
+
+    d3, t3 = lubm_like(n_universities=6, depts_per_univ=3, profs_per_dept=4,
+                       students_per_prof=10)
+    # an *unselective* subject star: every stage's per-shard total (~180 on
+    # 4 workers) overflows the floor class, on every stage
+    star = Query([
+        TriplePattern(Var("x"), Const(d3.lookup("rdf:type")),
+                      Const(d3.lookup("ub:Student"))),
+        TriplePattern(Var("x"), Const(d3.lookup("ub:advisor")), Var("y")),
+    ], name="bigstar")
+    kw = dict(adaptive=False, capacity=64)
+    eng = AdHashEngine(t3, 4, dictionary=d3, **kw)
+    ref = AdHashEngine(t3, 4, dictionary=d3, local_chain=False, **kw)
+    plan = eng.planner.plan(star)
+    # call the executors directly: the planner capacity hint would lift the
+    # starting class above the overflow point
+    r1, s1 = eng.executor.execute(star, plan.ordering, plan.join_vars,
+                                  capacity=64)
+    r2, s2 = ref.executor.execute(star, plan.ordering, plan.join_vars,
+                                  capacity=64)
+    assert s1.route == "single-local-main"
+    assert s1.n_retries > 0, "capacity 64 did not exercise the ladder"
+    assert s1.n_retries == s2.n_retries
+    assert r1.to_set() == r2.to_set()
+    want = match_query(t3, star)
+    assert set(map(tuple, r1.project_to(star.vars))) == want
+
+
+# ---------------------------------------------------------------- degraded
+def test_degraded_demotes_chain_and_recovers():
+    eng, ref = _twin_engines()
+    q = _star()
+    rel, st = eng.query(q)
+    assert st.route == "single-local-main"
+    eng.health.mark_failed(1)
+    rel_d, st_d = eng.query(q)
+    assert st_d.route == "single-degraded"
+    assert rel_d.to_set() == rel.to_set()
+    assert eng.report.n_degraded == 1
+    # the staged fallback matches the chain-disabled twin bit for bit
+    ref.query(q)
+    rel_r, st_r = ref.query(q)
+    assert rel_d.to_set() == rel_r.to_set()
+    assert st_d.comm_cells == st_r.comm_cells
+    eng.health.mark_recovered(1)
+    rel_h, st_h = eng.query(q)
+    assert st_h.route == "single-local-main"
+    assert rel_h.to_set() == rel.to_set()
+    assert eng.report.n_degraded == 1  # recovery stops the counting
+
+
+def test_degraded_batch_demotes_chain_buckets():
+    eng, _ = _twin_engines()
+    batch = [_QS["q1"].instantiate(np.random.default_rng(i))
+             for i in range(6)]
+    healthy = eng.query_batch(list(batch))
+    eng.health.mark_failed(2)
+    demoted = eng.query_batch(list(batch))
+    for (r1, s1), (r2, s2) in zip(healthy, demoted):
+        assert r1.to_set() == r2.to_set()
+        assert s2.route == "single-degraded", s2.route
+    assert eng.report.n_degraded == len(batch)
+
+
+# ----------------------------------------------------------------- batcher
+def test_batch_plan_local_chain_eligibility():
+    from repro.core.batcher import WorkloadBatcher
+
+    eng, _ = _twin_engines()
+    batcher = WorkloadBatcher()
+    for i, t in enumerate([_QS["q1"], _QS["q1"], _QS["q7"]]):
+        q = t.instantiate(np.random.default_rng(i))
+        plan = eng.planner.plan(q)
+        batcher.add(i, q, plan.ordering, plan.join_vars, 256)
+    plans = [b.plan for b in batcher.buckets()]
+    assert any(p.local_chain for p in plans)  # the q1 bucket
+    assert any(not p.local_chain for p in plans)  # the q7 bucket
+    for p in plans:
+        assert p.local_chain == (p.n_dsj == 0)
