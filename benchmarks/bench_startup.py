@@ -4,10 +4,24 @@ min-cut-class partitioning (MinCutLite stands in for METIS) vs random.
 The headline result: AdHash's subject-hash startup is orders of magnitude
 cheaper than min-cut partitioning, at the cost of zero locality guarantees —
 which the adaptivity then wins back incrementally (bench_adaptivity).
+
+Scale sweep (DESIGN §12): ``run_scale_sweep`` measures **time-to-online**
+(streaming ingest complete, store resident) and **time-to-first-answer**
+(first query returned, compile included) over a (triples x host-processes)
+grid.  Every cell runs in freshly launched worker processes — h=1 is one
+process with 8 fake CPU devices, h=2 two processes with 4 each, both over
+the same W=8 worker axis — so single- and multi-host startup are measured
+by the same code under the same device budget.  Cells are parsed from a
+``STARTUP_JSON:`` marker line on process 0's stdout and emitted as
+gateable lower-is-better ``_s`` rows (benchmarks/compare.py); the full
+records land in ``artifacts/startup_sweep.json``.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
+from pathlib import Path
 
 import numpy as np
 
@@ -59,6 +73,124 @@ def run(n_workers: int = 16) -> list[tuple[str, float, str]]:
     return rows
 
 
+# --------------------------------------------------------------- scale sweep
+_MARKER = "STARTUP_JSON: "
+_CHUNK = 8192  # streaming ingest chunk size for every sweep cell
+
+
+def _scale_child(n_triples: int, n_workers: int, chunk: int) -> None:
+    """One sweep cell, run inside a launched worker process (jax.distributed
+    already initialized by ``repro.launch --worker``).  Process 0 prints the
+    measurements as a ``STARTUP_JSON:`` marker line."""
+    import jax
+
+    from repro.core.query import Const, Query, TriplePattern, Var
+    from repro.core.substrate import DistributedSubstrate
+    from repro.data.synthetic_rdf import generate_stream
+
+    sub = DistributedSubstrate()
+    t0 = time.perf_counter()
+    eng = AdHashEngine.ingest_stream(
+        generate_stream(n_triples, chunk, seed=0),
+        n_workers, substrate=sub, adaptive=False,
+    )
+    sub.barrier("startup:online")
+    t_online = time.perf_counter() - t0
+
+    # first answer: a single-predicate scan, cold — compile time included,
+    # result forced to host (what a client would actually wait for)
+    q = Query([TriplePattern(Var("s"), Const(0), Var("o"))], name="first")
+    t1 = time.perf_counter()
+    rel, _ = eng.query(q)
+    n_answers = len(rel.to_numpy())
+    t_first = time.perf_counter() - t1
+
+    if jax.process_index() == 0:
+        print(_MARKER + json.dumps({
+            "triples": n_triples,
+            "processes": jax.process_count(),
+            "devices": len(jax.devices()),
+            "workers": n_workers,
+            "chunk": chunk,
+            "online_s": t_online,
+            "first_answer_s": t_first,
+            "answers": n_answers,
+        }), flush=True)
+
+
+def _sweep_cell(n_triples: int, hosts: int, n_workers: int = 8) -> dict:
+    """Launch one (triples, hosts) cell and parse process 0's marker."""
+    from repro.launch.multihost import launch_localhost
+
+    root = Path(__file__).resolve().parent.parent
+    results = launch_localhost(
+        hosts,
+        ["-m", "benchmarks.bench_startup", "--scale-child",
+         "--triples", str(n_triples), "--workers", str(n_workers),
+         "--chunk", str(_CHUNK)],
+        devices_per_process=n_workers // hosts,
+        timeout=600.0,
+        env={"PYTHONPATH": os.pathsep.join(
+            [str(root), os.environ.get("PYTHONPATH", "")])},
+        retries=2,
+    )
+    bad = [r for r in results if not r.ok]
+    if bad:
+        raise RuntimeError(
+            f"scale-sweep cell (n={n_triples}, h={hosts}) failed: "
+            f"p{bad[0].process_id} rc={bad[0].returncode}\n"
+            f"{bad[0].stderr[-3000:]}"
+        )
+    for line in results[0].stdout.splitlines():
+        if line.startswith(_MARKER):
+            return json.loads(line[len(_MARKER):])
+    raise RuntimeError(
+        f"scale-sweep cell (n={n_triples}, h={hosts}): no {_MARKER!r} "
+        f"marker in process 0 stdout:\n{results[0].stdout[-2000:]}"
+    )
+
+
+def _sweep(grid: list[tuple[int, int]]) -> list[tuple[str, float, str]]:
+    rows: list[tuple[str, float, str]] = []
+    records = []
+    for n, h in grid:
+        cell = _sweep_cell(n, h)
+        records.append(cell)
+        tag = f"startup/scale/n{n // 1000}k_h{h}"
+        derived = (f"procs={cell['processes']} devices={cell['devices']} "
+                   f"workers={cell['workers']} chunk={cell['chunk']}")
+        rows.append((f"{tag}_online_s", cell["online_s"], derived))
+        rows.append((f"{tag}_first_answer_s", cell["first_answer_s"],
+                     f"answers={cell['answers']}"))
+    out = Path("artifacts")
+    out.mkdir(exist_ok=True)
+    (out / "startup_sweep.json").write_text(
+        json.dumps(records, indent=2) + "\n"
+    )
+    return rows
+
+
+def run_scale_sweep() -> list[tuple[str, float, str]]:
+    """Full grid: startup time vs data size and host count."""
+    return _sweep([(100_000, 1), (100_000, 2), (300_000, 1), (300_000, 2)])
+
+
+def run_scale_sweep_fast() -> list[tuple[str, float, str]]:
+    """CI gate cell pair: one data size, single- vs two-process startup."""
+    return _sweep([(30_000, 1), (30_000, 2)])
+
+
 if __name__ == "__main__":
-    for r in run():
-        print(",".join(map(str, r)))
+    import argparse
+
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--scale-child", action="store_true")
+    parser.add_argument("--triples", type=int, default=30_000)
+    parser.add_argument("--workers", type=int, default=8)
+    parser.add_argument("--chunk", type=int, default=_CHUNK)
+    args = parser.parse_args()
+    if args.scale_child:
+        _scale_child(args.triples, args.workers, args.chunk)
+    else:
+        for r in run():
+            print(",".join(map(str, r)))

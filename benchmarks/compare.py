@@ -21,11 +21,19 @@ Both files are the ``--json`` output of ``benchmarks/run.py`` (row name ->
     Post-warmup recompiles are a correctness-of-discipline metric, not a
     noisy timing, so the tolerance is zero.
 
+  * a coarse wall-clock row (name ending in ``_s``: the startup sweep's
+    time-to-online / time-to-first-answer seconds) *rises* past the same
+    tolerance.  These are whole-phase timings — seconds, not microseconds —
+    so they are stable enough to gate, with their own median time-shift
+    normalization (a uniformly slower runner inflates every ``_s`` row by
+    the same factor and gates nothing; one startup cell regressing against
+    the rest fails).
+
 Rows only in one file are reported but never fail the gate: new benchmarks
 land with their first baseline, and retired ones drop out.  Lower-is-better
-timing rows (``_us`` suffixes) are deliberately *not* gated — wall-clock
-microseconds on shared CI runners are too noisy; the qps rows are measured
-best-of-N exactly to be gateable.
+*micro*-timing rows (``_us`` suffixes) are deliberately *not* gated —
+wall-clock microseconds on shared CI runners are too noisy; the qps rows
+are measured best-of-N exactly to be gateable.
 
 **Machine-speed normalization** (default on): shared CI runners and dev
 boxes differ in clock speed and load, and that shift moves *every* qps row
@@ -91,6 +99,18 @@ def _is_lower_better(name: str) -> bool:
     return _is_ratio(name) and "shed" in name
 
 
+def _is_time(name: str) -> bool:
+    """Gateable lower-is-better wall-clock rows (whole-phase seconds, e.g.
+    the startup sweep).  ``_us`` micro-timings deliberately don't match."""
+    return name.endswith("_s")
+
+
+def _median(values: list[float]) -> float:
+    s = sorted(values)
+    mid = len(s) // 2
+    return s[mid] if len(s) % 2 else (s[mid - 1] + s[mid]) / 2
+
+
 def compare(baseline: dict, current: dict, qps_tolerance: float = 0.15,
             normalize: bool = True) -> tuple[list[str], list[str], int]:
     """Returns (failures, notes, n_gated) — n_gated counts the shared rows
@@ -102,25 +122,35 @@ def compare(baseline: dict, current: dict, qps_tolerance: float = 0.15,
     shared = sorted(set(baseline) & set(current))
 
     # median machine-speed shift over the absolute qps rows (see module
-    # docstring); ratio rows and counters are gated un-normalized
+    # docstring); ratio rows and counters are gated un-normalized.  The
+    # wall-clock ``_s`` rows get their *own* median (time ratios move
+    # inversely to qps ratios, and the sweep's subprocess startup costs
+    # shift differently from in-process query throughput).
     calib = 1.0
+    calib_t = 1.0
     if normalize:
-        shifts = sorted(
+        shifts = [
             current[n]["value"] / baseline[n]["value"]
             for n in shared
             if _is_qps(n) and not _is_ratio(n) and baseline[n]["value"] > 0
-        )
+        ]
         if shifts:
-            mid = len(shifts) // 2
-            calib = (shifts[mid] if len(shifts) % 2
-                     else (shifts[mid - 1] + shifts[mid]) / 2)
+            calib = _median(shifts)
+        tshifts = [
+            current[n]["value"] / baseline[n]["value"]
+            for n in shared
+            if _is_time(n) and baseline[n]["value"] > 0
+        ]
+        if tshifts:
+            calib_t = _median(tshifts)
 
     for name in shared:
         base = baseline[name]["value"]
         cur = current[name]["value"]
         base_counters = _derived_counters(baseline[name].get("derived", ""))
         cur_counters = _derived_counters(current[name].get("derived", ""))
-        if _is_qps(name) or _is_recompile(name) or cur_counters:
+        if (_is_qps(name) or _is_recompile(name) or _is_time(name)
+                or cur_counters):
             n_gated += 1
         for key, cur_n in cur_counters.items():
             base_n = base_counters.get(key)
@@ -134,6 +164,19 @@ def compare(baseline: dict, current: dict, qps_tolerance: float = 0.15,
                     f"{name}: post-warmup recompiles increased "
                     f"{base:g} -> {cur:g}"
                 )
+            continue
+        if _is_time(name):
+            adj = cur / calib_t
+            if adj > base * (1.0 + qps_tolerance) and adj - base > 1e-12:
+                failures.append(
+                    f"{name}: {cur:.3f}s ({adj:.3f}s machine-normalized) is "
+                    f"{100 * (adj / base - 1) if base > 0 else 0:.1f}% above "
+                    f"baseline {base:.3f}s (lower is better, tolerance "
+                    f"{qps_tolerance:.0%})"
+                )
+            else:
+                notes.append(f"{name}: {base:.3f}s -> {cur:.3f}s ok "
+                             "(lower is better)")
             continue
         if _is_qps(name):
             scale = 1.0 if _is_ratio(name) else calib
@@ -160,6 +203,8 @@ def compare(baseline: dict, current: dict, qps_tolerance: float = 0.15,
                 notes.append(f"{name}: {base:.1f} -> {cur:.1f} ok")
     if normalize and calib != 1.0:
         notes.append(f"(median machine-speed shift: {calib:.2f}x)")
+    if normalize and calib_t != 1.0:
+        notes.append(f"(median wall-clock shift: {calib_t:.2f}x)")
     for name in sorted(set(current) - set(baseline)):
         notes.append(f"{name}: new metric (no baseline yet)")
     for name in sorted(set(baseline) - set(current)):

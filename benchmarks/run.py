@@ -54,6 +54,8 @@ def _benches(fast: bool):
             #                                       master-restart recovery
             bench_serving.run_serving_sharded,  # ISSUE 8: online serving —
             #               saturation qps, p50/p99, 2x-overload shed rate
+            bench_startup.run_scale_sweep_fast,  # ISSUE 10: time-to-online /
+            #      first-answer, 1 vs 2 processes (gateable _s rows + artifact)
         )
     return (
         bench_partition.run,
@@ -75,6 +77,8 @@ def _benches(fast: bool):
         bench_balance.run_skew_sharded,  # same on the 8-device mesh
         bench_recovery.run_recovery_sharded,  # degraded-mesh + recovery cost
         bench_serving.run_serving_sharded,  # online serving under SLO
+        bench_startup.run_scale_sweep,  # ISSUE 10: (triples x hosts) startup
+        #                 grid (artifact: artifacts/startup_sweep.json)
     )
 
 

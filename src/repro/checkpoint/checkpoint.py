@@ -34,6 +34,8 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.compat import fetch_global
+
 __all__ = ["CheckpointManager"]
 
 
@@ -51,7 +53,7 @@ def _flatten_with_names(tree: Any) -> dict[str, np.ndarray]:
         name = "/".join(
             str(getattr(k, "key", getattr(k, "idx", k))) for k in path
         )
-        flat[name] = np.asarray(leaf)
+        flat[name] = fetch_global(leaf)
     return flat
 
 
@@ -264,7 +266,7 @@ class CheckpointManager:
             leaves, n_ids = st.tree_flatten()
             names = ("spo_ps", "keys_ps", "spo_po", "keys_po", "counts")
             for name, leaf in zip(names, leaves):
-                arrays[f"{sid}/{name}"] = np.asarray(leaf)
+                arrays[f"{sid}/{name}"] = fetch_global(leaf)
             modules[sid] = {"n_ids": int(n_ids)}
         np.savez(tmp / "replicas.npz", **arrays)
 

@@ -45,6 +45,37 @@ class Dictionary:
             return np.zeros((0, 3), dtype=np.int32)
         return np.asarray(rows, dtype=np.int32)
 
+    def encode_chunk(self, triples: Sequence[tuple[str, str, str]]) -> np.ndarray:
+        """Streaming encoder: one chunk of (s, p, o) string triples -> ids.
+
+        Vectorized through ``np.unique`` over the flattened (row-major)
+        chunk; new terms are assigned ids in first-occurrence order of that
+        flattening, which is exactly the order the sequential
+        :meth:`encode_term` loop visits them — so encoding a triple file
+        chunk-by-chunk yields the same ids as :meth:`encode_triples` on the
+        whole file, for **any** chunk boundaries (the dictionary-stability
+        regression in tests/test_ingest_stream.py)."""
+        arr = np.asarray(list(triples), dtype=np.str_)
+        if arr.size == 0:
+            return np.zeros((0, 3), dtype=np.int32)
+        arr = arr.reshape(-1, 3)
+        flat = arr.ravel()
+        uniq, first, inv = np.unique(flat, return_index=True,
+                                     return_inverse=True)
+        get = self._term_to_id.get
+        ids = np.fromiter((get(t, -1) for t in uniq), dtype=np.int64,
+                          count=len(uniq))
+        missing = np.flatnonzero(ids < 0)
+        if missing.size:
+            # assign new ids in first-occurrence order within the chunk
+            for j in missing[np.argsort(first[missing], kind="stable")]:
+                term = str(uniq[j])
+                tid = len(self._id_to_term)
+                self._term_to_id[term] = tid
+                self._id_to_term.append(term)
+                ids[j] = tid
+        return ids[inv].reshape(arr.shape).astype(np.int32)
+
     # ------------------------------------------------------------------ decode
     def decode_term(self, tid: int) -> str:
         return self._id_to_term[int(tid)]

@@ -21,21 +21,22 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.compat import fetch_global
+
 from .backend import quantize_capacity
 from .batcher import WorkloadBatcher
 from .dictionary import Dictionary
 from .executor import Executor, ExecutorError, QueryStats
 from .health import HealthState
 from .heatmap import HeatMap
+from .ingest import StreamIngestor
 from .ird import IncrementalRedistributor, IRDStats
 from .pattern_index import ParallelExecutor, PatternIndex, ReplicaIndex
 from .placement import resolve_placement
 from .planner import LocalityAwarePlanner, Plan
 from .query import Query, TriplePattern, Var
 from .relation import Relation
-from .stats import GlobalStats, compute_stats
 from .transform import build_redistribution_tree
-from .triples import ShardedTripleStore
 
 __all__ = ["AdHashEngine", "EngineReport"]
 
@@ -67,9 +68,15 @@ class EngineReport:
 
 
 class AdHashEngine:
+    """``triples`` may be a host array (one-shot bootstrap) or an *iterator*
+    of (n, 3) chunks (out-of-core streaming bootstrap, DESIGN §12) — both
+    flow through :class:`repro.core.ingest.StreamIngestor`, so a chunked
+    ingest produces a store bit-identical to the one-shot build.  Use
+    :meth:`ingest_stream` for the explicit streaming spelling."""
+
     def __init__(
         self,
-        triples: np.ndarray,
+        triples,
         n_workers: int,
         *,
         dictionary: Dictionary | None = None,
@@ -91,7 +98,6 @@ class AdHashEngine:
         from .substrate import SingleDeviceSubstrate
 
         t0 = time.perf_counter()
-        triples = np.asarray(triples)
         self.w = n_workers
         self.dictionary = dictionary
         self.adaptive = adaptive
@@ -132,29 +138,32 @@ class AdHashEngine:
         self.placement = resolve_placement(placement, n_workers)
         self.skew_threshold = float(skew_threshold)
 
-        # --- bootstrap (paper §3.4): partition, load, collect statistics
-        self.n_ids = int(triples.max()) + 1 if triples.size else 1
-        assign = self.placement.place_triples_np(triples) if triples.size \
-            else np.zeros(0, dtype=np.int32)
-        self.store = self.substrate.shard_store(ShardedTripleStore.build(
-            triples, assign, n_workers, self.n_ids
-        ))
-        self.stats: GlobalStats = compute_stats(triples, self.n_ids)
+        # --- bootstrap (paper §3.4): partition, load, collect statistics.
+        # One code path for both input shapes: a host array becomes a single
+        # chunk, an iterator streams chunk-by-chunk (out-of-core, §12) —
+        # StreamIngestor buffers only this process's worker block and the
+        # per-worker sorted-index assembly is bit-identical to the one-shot
+        # ShardedTripleStore.build (asserted in tests/test_ingest_stream.py).
+        ingestor = StreamIngestor(
+            n_workers, placement=self.placement, substrate=self.substrate
+        )
+        if isinstance(triples, (np.ndarray, list, tuple)):
+            arr = np.asarray(triples)
+            if arr.size:
+                ingestor.add_chunk(arr)
+        else:
+            for chunk in triples:
+                ingestor.add_chunk(chunk)
+        self.store, self.stats, self.n_ids = ingestor.finish()
 
         # split-candidate pool for the skew detector: the top subjects by
         # out-degree (star size == data-balance impact), scored against the
         # heat map at trigger time.  Only materialized for policies that can
         # actually split.
-        self._split_candidates: tuple[np.ndarray, np.ndarray] | None = None
-        if self.placement.supports_split and triples.size:
-            deg = np.bincount(triples[:, 0].astype(np.int64),
-                              minlength=self.n_ids)
-            k = min(64, int((deg > 0).sum()))
-            if k:
-                top = np.argpartition(deg, -k)[-k:]
-                self._split_candidates = (
-                    top.astype(np.int64), deg[top].astype(np.int64)
-                )
+        self._split_candidates: tuple[np.ndarray, np.ndarray] | None = (
+            ingestor.split_candidates()
+            if self.placement.supports_split else None
+        )
 
         # worker health: while any shard is failed, PI hits and main-index
         # chains are demoted from the shard-local routes to the distributed
@@ -191,6 +200,20 @@ class AdHashEngine:
         self.adaptivity_paused = False
         self.report = EngineReport()
         self.startup_time_s = time.perf_counter() - t0
+
+    # ------------------------------------------------------------- streaming
+    @classmethod
+    def ingest_stream(cls, chunks, n_workers: int, **kwargs) -> "AdHashEngine":
+        """Bootstrap from an iterable of (n, 3) triple chunks (DESIGN §12).
+
+        Hash-places and buffers chunk-by-chunk: peak host memory is the
+        process's shard footprint plus O(chunk size), never the full triple
+        array, and the resulting store is bit-identical to a one-shot
+        ``AdHashEngine(np.concatenate(chunks), ...)`` — both bootstraps run
+        the same :class:`StreamIngestor` path.  On a multi-process substrate
+        every process must consume the same chunk sequence (SPMD ingest);
+        each keeps only its own worker block."""
+        return cls(iter(chunks), n_workers, **kwargs)
 
     # ------------------------------------------------------------ cardinality
     def _count_pattern(self, q: TriplePattern) -> int:
@@ -579,7 +602,7 @@ class AdHashEngine:
         plc = self.placement
         if not plc.supports_split or self._split_candidates is None:
             return
-        counts = np.asarray(self.store.counts, dtype=np.int64)
+        counts = fetch_global(self.store.counts).astype(np.int64)
         mean = float(counts.mean())
         if mean <= 0.0 or float(counts.max()) <= self.skew_threshold * mean:
             return
@@ -633,12 +656,12 @@ class AdHashEngine:
     # ------------------------------------------------------------- inspection
     def replication_ratio(self) -> float:
         """Replicated triples as a fraction of the original data."""
-        total = int(np.asarray(self.store.counts).sum())
+        total = int(fetch_global(self.store.counts).sum())
         rep = int(self.replicas.per_worker_triples().sum())
         return rep / max(total, 1)
 
     def load_balance(self) -> dict:
-        main = np.asarray(self.store.counts, dtype=np.int64)
+        main = fetch_global(self.store.counts).astype(np.int64)
         rep = self.replicas.per_worker_triples()
         tot = main + rep
         return {

@@ -1,0 +1,211 @@
+"""Out-of-core streaming ingest (DESIGN §12).
+
+``StreamIngestor`` is the single bootstrap path of the engine: both one-shot
+arrays and chunk streams flow through it, so chunked ingest is bit-identical
+to one-shot by construction rather than by parallel-implementation luck.
+Per chunk it
+
+  * hash-places every row through the engine's ``PlacementPolicy`` (a
+    directory table mutated mid-stream applies to subsequent chunks, exactly
+    like the one-shot build would have applied the mutated table to all
+    rows),
+  * buffers only the rows owned by *this process's* worker block
+    (``substrate.local_worker_slice``) — on a multi-host mesh each process
+    retains 1/P of the data,
+  * folds the chunk into the global accumulators: per-worker counts, id
+    range, subject out-degrees (the engine's split-candidate pool) and the
+    §3.3 predicate statistics.
+
+``finish`` assembles the per-worker sorted indexes from the local buffers
+(same lexsort keys as ``ShardedTripleStore.build``; buffered rows appear in
+stream order, which *is* the one-shot row order, so even sort ties break
+identically) and places them through ``substrate.globalize_worker_array`` —
+each process device_puts only its local block.  Peak host memory is the
+local shard footprint plus O(chunk): the full triple array is never
+materialized (asserted via tracemalloc in tests/test_ingest_stream.py).
+
+The statistics accumulator reproduces ``stats.compute_stats`` exactly (not
+approximately like ``merge_stats``): per-predicate unique-id sets are merged
+per chunk and the degree-weighted scores are computed once at finish from
+the final degree array, so planner inputs are bit-identical to one-shot.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .stats import GlobalStats, PredicateStats
+from .triples import I64MAX, ShardedTripleStore
+
+__all__ = ["StreamIngestor", "IngestResult"]
+
+
+class IngestResult(tuple):
+    """(store, stats, n_ids) with attribute access."""
+
+    __slots__ = ()
+
+    def __new__(cls, store, stats, n_ids):
+        return super().__new__(cls, (store, stats, n_ids))
+
+    store = property(lambda self: self[0])
+    stats = property(lambda self: self[1])
+    n_ids = property(lambda self: self[2])
+
+
+def _grow_to(arr: np.ndarray, n: int) -> np.ndarray:
+    """Grow a 1-D accumulator to hold index n-1 (amortized doubling)."""
+    if n <= len(arr):
+        return arr
+    cap = max(len(arr), 1)
+    while cap < n:
+        cap *= 2
+    out = np.zeros(cap, dtype=arr.dtype)
+    out[: len(arr)] = arr
+    return out
+
+
+class StreamIngestor:
+    """Chunk-by-chunk bootstrap: place, buffer locally, accumulate stats."""
+
+    def __init__(self, n_workers: int, *, placement, substrate):
+        self.w = n_workers
+        self.placement = placement
+        self.substrate = substrate
+        self.local = substrate.local_worker_slice(n_workers)
+        # per-local-worker row buffers (int64, stream order)
+        self._buffers: list[list[np.ndarray]] = [
+            [] for _ in range(self.local.stop - self.local.start)
+        ]
+        self._counts = np.zeros(n_workers, dtype=np.int64)
+        self.n_triples = 0
+        self._max_id = -1
+        self._deg = np.zeros(1, dtype=np.int64)  # in+out degree per vertex
+        self._sdeg = np.zeros(1, dtype=np.int64)  # subject out-degree
+        # predicate id -> [cardinality, sorted unique subjects, objects]
+        self._preds: dict[int, list] = {}
+        self._finished = False
+
+    # ------------------------------------------------------------------ add
+    def add_chunk(self, chunk: np.ndarray) -> None:
+        if self._finished:
+            raise RuntimeError("StreamIngestor already finished")
+        chunk = np.asarray(chunk, dtype=np.int64)
+        if chunk.ndim != 2 or chunk.shape[1] != 3:
+            raise ValueError(f"chunk must be (n, 3), got {chunk.shape}")
+        if not len(chunk):
+            return
+        assign = self.placement.place_triples_np(chunk)
+        self._counts += np.bincount(assign, minlength=self.w)
+        lo, hi = self.local.start, self.local.stop
+        mask = (assign >= lo) & (assign < hi)
+        local_rows = chunk[mask]
+        local_assign = assign[mask]
+        for w in range(lo, hi):
+            rows = local_rows[local_assign == w]
+            if len(rows):
+                self._buffers[w - lo].append(rows)
+
+        # ---- global accumulators (identical on every process)
+        self.n_triples += len(chunk)
+        mx = int(chunk.max())
+        self._max_id = max(self._max_id, mx)
+        self._deg = _grow_to(self._deg, mx + 1)
+        np.add.at(self._deg, chunk[:, 0], 1)
+        np.add.at(self._deg, chunk[:, 2], 1)
+        self._sdeg = _grow_to(self._sdeg, mx + 1)
+        np.add.at(self._sdeg, chunk[:, 0], 1)
+        for p in np.unique(chunk[:, 1]):
+            rows = chunk[chunk[:, 1] == p]
+            ent = self._preds.get(int(p))
+            subs = np.unique(rows[:, 0])
+            objs = np.unique(rows[:, 2])
+            if ent is None:
+                self._preds[int(p)] = [len(rows), subs, objs]
+            else:
+                ent[0] += len(rows)
+                ent[1] = np.union1d(ent[1], subs)
+                ent[2] = np.union1d(ent[2], objs)
+
+    # ------------------------------------------------------------- assemble
+    @property
+    def n_ids(self) -> int:
+        return self._max_id + 1 if self._max_id >= 0 else 1
+
+    def finish(self) -> IngestResult:
+        """Build the (host-sharded) store and exact global statistics."""
+        if self._finished:
+            raise RuntimeError("StreamIngestor already finished")
+        self._finished = True
+        n_ids = self.n_ids
+        cap = max(int(self._counts.max()), 1)
+        lo, hi = self.local.start, self.local.stop
+        w_local = hi - lo
+        spo_ps = np.zeros((w_local, cap, 3), dtype=np.int32)
+        keys_ps = np.full((w_local, cap), I64MAX, dtype=np.int64)
+        spo_po = np.zeros((w_local, cap, 3), dtype=np.int32)
+        keys_po = np.full((w_local, cap), I64MAX, dtype=np.int64)
+        for i in range(w_local):
+            parts = self._buffers[i]
+            if not parts:
+                continue
+            rows = parts[0] if len(parts) == 1 else np.concatenate(parts)
+            self._buffers[i] = []  # free as we go: peak is one worker's rows
+            n = len(rows)
+            if n > cap:
+                raise ValueError(
+                    f"worker {lo + i} shard {n} exceeds capacity {cap}"
+                )
+            kps = rows[:, 1] * n_ids + rows[:, 0]
+            o1 = np.lexsort((rows[:, 2], kps))
+            spo_ps[i, :n] = rows[o1]
+            keys_ps[i, :n] = kps[o1]
+            kpo = rows[:, 1] * n_ids + rows[:, 2]
+            o2 = np.lexsort((rows[:, 0], kpo))
+            spo_po[i, :n] = rows[o2]
+            keys_po[i, :n] = kpo[o2]
+        sub = self.substrate
+        store = ShardedTripleStore(
+            spo_ps=sub.globalize_worker_array(spo_ps, self.w),
+            keys_ps=sub.globalize_worker_array(keys_ps, self.w),
+            spo_po=sub.globalize_worker_array(spo_po, self.w),
+            keys_po=sub.globalize_worker_array(keys_po, self.w),
+            counts=sub.globalize_worker_array(
+                self._counts[lo:hi].astype(np.int32), self.w
+            ),
+            n_ids=int(n_ids),
+        )
+        sub.barrier("ingest:store")
+        return IngestResult(store, self._build_stats(n_ids), n_ids)
+
+    def _build_stats(self, n_ids: int) -> GlobalStats:
+        if self.n_triples == 0:
+            return GlobalStats()
+        deg = np.zeros(n_ids, dtype=np.int64)
+        deg[: len(self._deg)] = self._deg[:n_ids]
+        gs = GlobalStats(n_triples=self.n_triples)
+        gs._degree = deg
+        for p in sorted(self._preds):
+            card, subs, objs = self._preds[p]
+            gs.per_pred[p] = PredicateStats(
+                card=int(card),
+                n_subj=int(len(subs)),
+                n_obj=int(len(objs)),
+                subj_score=float(deg[subs].mean()),
+                obj_score=float(deg[objs].mean()),
+            )
+        return gs
+
+    def split_candidates(
+        self, k_max: int = 64
+    ) -> tuple[np.ndarray, np.ndarray] | None:
+        """Top subjects by out-degree — the engine's skew split-candidate
+        pool, identical to the historical full-array bincount selection."""
+        if self.n_triples == 0:
+            return None
+        deg = np.zeros(self.n_ids, dtype=np.int64)
+        deg[: len(self._sdeg)] = self._sdeg[: self.n_ids]
+        k = min(k_max, int((deg > 0).sum()))
+        if not k:
+            return None
+        top = np.argpartition(deg, -k)[-k:]
+        return top.astype(np.int64), deg[top].astype(np.int64)

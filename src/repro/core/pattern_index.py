@@ -300,9 +300,11 @@ class ReplicaIndex:
 
     # ------------------------------------------------------------ accounting
     def per_worker_triples(self) -> np.ndarray:
+        from repro.compat import fetch_global
+
         tot = np.zeros(self.w, dtype=np.int64)
         for st in self.modules.values():
-            tot += np.asarray(st.counts, dtype=np.int64)
+            tot += fetch_global(st.counts).astype(np.int64)
         return tot
 
     def max_per_worker(self) -> int:

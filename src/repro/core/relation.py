@@ -67,9 +67,12 @@ class Relation:
 
     # ------------------------------------------------------------ host utils
     def to_numpy(self) -> np.ndarray:
-        """All valid binding rows concatenated across workers (host-side)."""
-        cols = np.asarray(self.cols)
-        valid = np.asarray(self.valid)
+        """All valid binding rows concatenated across workers (host-side);
+        works for worker shards spanning processes (fetch_global)."""
+        from repro.compat import fetch_global
+
+        cols = fetch_global(self.cols)
+        valid = fetch_global(self.valid)
         return cols[valid]
 
     def to_set(self) -> set[tuple[int, ...]]:

@@ -70,7 +70,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
-from repro.compat import shard_map
+from repro.compat import fetch_global, shard_map
 
 from . import dsj
 from .backend import resolve_backend
@@ -78,8 +78,8 @@ from .relation import Relation
 from .triples import ShardedTripleStore, match_ranges
 
 __all__ = ["Substrate", "SingleDeviceSubstrate", "MeshSubstrate",
-           "WORKER_AXIS", "host_total", "host_chain_totals", "host_fetch",
-           "trace_host_syncs"]
+           "DistributedSubstrate", "WORKER_AXIS", "host_total",
+           "host_chain_totals", "host_fetch", "trace_host_syncs"]
 
 WORKER_AXIS = "data"
 
@@ -99,6 +99,10 @@ class Substrate:
 
     name = "single"
     n_devices = 1
+    # multi-process topology (DESIGN §12): one process holding every device
+    # unless a DistributedSubstrate overrides these from jax.distributed
+    n_processes = 1
+    process_id = 0
 
     # ----------------------------------------------------------- resolution
     def resolve_backend(self, name: str | None) -> str:
@@ -118,6 +122,27 @@ class Substrate:
 
     def shard_relation(self, rel: Relation) -> Relation:
         return rel
+
+    # ------------------------------------------- host-sharded loading (§12)
+    # The out-of-core ingest path builds worker shards host-side and places
+    # them through these three hooks instead of materializing a global array
+    # per process: ``local_worker_slice`` names the contiguous worker block
+    # this process is responsible for, ``globalize_worker_array`` assembles a
+    # (possibly cross-process) global device array from that local block, and
+    # ``barrier`` fences bootstrap phases.  Single-process substrates load
+    # every worker locally, so the hooks degenerate to jnp.asarray.
+    def local_worker_slice(self, n_workers: int) -> slice:
+        """Contiguous worker block this process loads ([0, W) here)."""
+        self.check_workers(n_workers)
+        return slice(0, n_workers)
+
+    def globalize_worker_array(self, local: np.ndarray, n_workers: int):
+        """Device array with global leading axis ``n_workers`` built from
+        this process's ``local_worker_slice`` block."""
+        return jnp.asarray(local)
+
+    def barrier(self, tag: str = "barrier") -> None:
+        """Cross-process rendezvous (no-op off a multi-process mesh)."""
 
     # -------------------------------------------------------------- stages
     match_ranges = staticmethod(match_ranges)
@@ -200,9 +225,12 @@ def host_total(total) -> int:
     Regular stages return a replicated scalar (pmax-ed on a mesh); the
     shard-local stages return the per-shard maxima as a ``(D,)`` vector and
     skip the on-device reduction — the host takes the max during the
-    overflow-retry check, a sync point it hits regardless."""
+    overflow-retry check, a sync point it hits regardless.  Under a
+    multi-process mesh the fetch routes through ``fetch_global`` (the
+    per-shard vector spans processes); every process performs it in
+    lockstep, so the retry decision is replicated by construction."""
     _note_host_transfer()
-    return int(np.max(np.asarray(total)))
+    return int(np.max(fetch_global(total)))
 
 
 def host_chain_totals(totals) -> np.ndarray:
@@ -215,14 +243,14 @@ def host_chain_totals(totals) -> np.ndarray:
     (S,) int vector.  This is THE one device->host transfer of a warm
     fast-path query."""
     _note_host_transfer()
-    arr = np.asarray(totals)
+    arr = fetch_global(totals)
     return arr.reshape(arr.shape[0], -1).max(axis=1)
 
 
 def host_fetch(x) -> np.ndarray:
     """Materialize a device array on the host (result/accounting fetch)."""
     _note_host_transfer()
-    return np.asarray(x)
+    return fetch_global(x)
 
 
 class SingleDeviceSubstrate(Substrate):
@@ -274,6 +302,10 @@ class MeshSubstrate(Substrate):
     def shard_relation(self, rel: Relation) -> Relation:
         self.check_workers(rel.n_workers)
         return rel.device_put(self.worker_sharding())
+
+    def globalize_worker_array(self, local, n_workers: int):
+        # single process: the local block IS the global array
+        return jax.device_put(local, self.worker_sharding())
 
     # -------------------------------------------------------------- stages
     # Thin bindings to the module-level jitted wrappers below; mesh/axis ride
@@ -447,6 +479,129 @@ class MeshSubstrate(Substrate):
             shared_checks=shared_checks, append_cols=append_cols,
             cap_out=cap_out, backend=backend,
         )
+
+
+class DistributedSubstrate(MeshSubstrate):
+    """MeshSubstrate over a multi-host mesh via ``jax.distributed`` (§12).
+
+    The data plane is *unchanged*: the same module-level sharded stage
+    wrappers run over a mesh whose devices now span processes, so the
+    all_to_all / all_gather lowering, the zero-collective shard-local route,
+    the fused chains and the jit cache discipline all carry over verbatim.
+    What this class adds is the *host side* of multi-process SPMD:
+
+      * bring-up — ``repro.launch.multihost.init_from_env`` joins the
+        coordinator (args or the ``ADHASH_*`` env protocol) before the first
+        backend touch, then the mesh is built over ``jax.devices()``, which
+        now lists every process's devices;
+      * host-sharded loading — ``local_worker_slice`` exposes the contiguous
+        worker block whose devices live in this process, and
+        ``globalize_worker_array`` assembles global arrays from per-process
+        blocks (``jax.make_array_from_process_local_data``), so ingest
+        device_puts only 1/P of the store per host;
+      * host fetches — ``shard_store`` / ``shard_relation`` recognise
+        already-global (non-fully-addressable) arrays and pass them through;
+        everything host-bound funnels through ``fetch_global``.
+
+    Every host-side control decision (overflow retries, adaptivity, query
+    routing) consumes replicated or allgathered values, so all processes
+    issue identical collective sequences — the SPMD lockstep contract the
+    parity suite asserts.
+
+    With no coordinator configured this degenerates to a single-process
+    ``MeshSubstrate`` over the local devices (n_processes == 1), which keeps
+    the fast in-process tests meaningful."""
+
+    name = "distributed"
+
+    def __init__(
+        self,
+        mesh: Mesh | None = None,
+        *,
+        axis: str = WORKER_AXIS,
+        devices=None,
+        coordinator: str | None = None,
+        num_processes: int | None = None,
+        process_id: int | None = None,
+    ):
+        from repro.launch.multihost import init_from_env
+
+        init_from_env(coordinator=coordinator, num_processes=num_processes,
+                      process_id=process_id)
+        super().__init__(mesh, axis=axis, devices=devices)
+        self.n_processes = jax.process_count()
+        self.process_id = jax.process_index()
+
+    def check_workers(self, n_workers: int) -> None:
+        super().check_workers(n_workers)
+        if n_workers % max(self.n_processes, 1):
+            raise ValueError(
+                f"n_workers={n_workers} must be divisible by the process "
+                f"count {self.n_processes} (each process loads a contiguous "
+                f"worker block)"
+            )
+
+    # ------------------------------------------- host-sharded loading (§12)
+    def local_worker_slice(self, n_workers: int) -> slice:
+        """Worker block whose devices are addressable from this process."""
+        self.check_workers(n_workers)
+        amap = self.worker_sharding().addressable_devices_indices_map(
+            (n_workers,)
+        )
+        starts = [idx[0].start or 0 for idx in amap.values()]
+        stops = [
+            n_workers if idx[0].stop is None else idx[0].stop
+            for idx in amap.values()
+        ]
+        lo, hi = min(starts), max(stops)
+        if hi - lo != n_workers // self.n_processes:
+            raise AssertionError(
+                f"process-local worker block [{lo}, {hi}) is not the "
+                f"contiguous 1/{self.n_processes} slice of W={n_workers}"
+            )
+        return slice(lo, hi)
+
+    def globalize_worker_array(self, local, n_workers: int):
+        local = np.asarray(local)
+        return jax.make_array_from_process_local_data(
+            self.worker_sharding(), local, (n_workers,) + local.shape[1:]
+        )
+
+    def shard_store(self, store: ShardedTripleStore) -> ShardedTripleStore:
+        # device-rebuilt stores (IRD replica modules / rebalances) are
+        # already global arrays spanning processes — re-placing them would
+        # require a host round-trip no process can perform alone
+        if isinstance(store.spo_ps, jax.Array) \
+                and not store.spo_ps.is_fully_addressable:
+            return store
+        self.check_workers(store.n_workers)
+        sl = self.local_worker_slice(store.n_workers)
+        leaves, aux = store.tree_flatten()
+        placed = tuple(
+            self.globalize_worker_array(np.asarray(x)[sl], store.n_workers)
+            for x in leaves
+        )
+        return ShardedTripleStore.tree_unflatten(aux, placed)
+
+    def shard_relation(self, rel: Relation) -> Relation:
+        if isinstance(rel.cols, jax.Array) \
+                and not rel.cols.is_fully_addressable:
+            return rel
+        self.check_workers(rel.n_workers)
+        sl = self.local_worker_slice(rel.n_workers)
+        return Relation(
+            self.globalize_worker_array(np.asarray(rel.cols)[sl],
+                                        rel.n_workers),
+            self.globalize_worker_array(np.asarray(rel.valid)[sl],
+                                        rel.n_workers),
+            rel.vars,
+        )
+
+    def barrier(self, tag: str = "barrier") -> None:
+        if self.n_processes > 1:
+            from repro.compat import host_barrier
+
+            host_barrier(tag)
 
 
 # ===========================================================================

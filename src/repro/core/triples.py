@@ -171,10 +171,13 @@ class ShardedTripleStore:
 
     # ------------------------------------------------- host-side utilities
     def to_numpy(self) -> np.ndarray:
-        """All live triples, host-side (tests / collection)."""
+        """All live triples, host-side (tests / collection); works for
+        worker shards spanning processes (fetch_global)."""
+        from repro.compat import fetch_global
+
         out = []
-        counts = np.asarray(self.counts)
-        spo = np.asarray(self.spo_ps)
+        counts = fetch_global(self.counts)
+        spo = fetch_global(self.spo_ps)
         for w in range(self.n_workers):
             out.append(spo[w, : counts[w]])
         return np.concatenate(out, axis=0) if out else np.zeros((0, 3), np.int32)

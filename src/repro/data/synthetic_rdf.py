@@ -9,18 +9,29 @@ many low-degree subjects).
 ``Workload`` mirrors Appendix B: query templates instantiated with varying
 constants (Table 16 — constants changed per instance, structure shared), so
 the heat map sees hot *templates* rather than hot literal queries.
+
+Out-of-core generation (DESIGN §12): ``generate`` / ``generate_stream`` are
+*counter-based* — triple i is a pure hash of (seed, i), never of any
+accumulated RNG state — so ``generate(n, seed=s)`` equals the concatenation
+of ``generate_stream(n, chunk, seed=s)`` for **every** chunk size, and a
+billion-triple stream needs host memory proportional to one chunk.  (The
+older ``zipf_skew`` draws from a stateful Generator and must materialize the
+full array; it is kept unchanged because its exact output is baked into the
+skew benchmarks.)
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Iterator
 
 import numpy as np
 
 from repro.core.dictionary import Dictionary
+from repro.core.placement import splitmix64_np
 from repro.core.query import Const, Query, TriplePattern, Var
 
 __all__ = ["lubm_like", "Workload", "lubm_queries", "zipf_skew",
-           "zipf_workload"]
+           "zipf_workload", "generate", "generate_stream"]
 
 PREDICATES = (
     "rdf:type",
@@ -111,6 +122,86 @@ def zipf_skew(
     o = rng.integers(0, n_objects, size=n_triples) + o_base
     triples = np.stack([s, p, o], axis=1).astype(np.int64)
     return np.unique(triples, axis=0)
+
+
+def _counter_hash(seed: int, stream: int, idx: np.ndarray) -> np.ndarray:
+    """Deterministic 63-bit hash of (seed, stream, index) — the per-triple
+    randomness source of the counter-based generators.  Two splitmix64
+    rounds with seed/stream folded in between decorrelate the three streams
+    (subject / predicate / object) of one index."""
+    # fold seed and stream into one 64-bit key in Python ints (numpy scalar
+    # arithmetic warns on the intended wraparound)
+    k = np.uint64(
+        ((seed & 0xFFFFFFFFFFFFFFFF) * 0xD1342543DE82EF95
+         + stream * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    )
+    h = splitmix64_np(idx.astype(np.uint64))
+    return splitmix64_np(h.astype(np.uint64) + k)
+
+
+def _counter_uniform(seed: int, stream: int, idx: np.ndarray) -> np.ndarray:
+    """[0, 1) float64 per index, chunking-invariant."""
+    return _counter_hash(seed, stream, idx).astype(np.float64) / float(1 << 63)
+
+
+def generate_stream(
+    n_triples: int,
+    chunk_size: int,
+    *,
+    n_subjects: int = 512,
+    n_objects: int = 8192,
+    n_predicates: int = 8,
+    exponent: float = 1.4,
+    seed: int = 0,
+) -> Iterator[np.ndarray]:
+    """Yield ``(<=chunk_size, 3)`` int64 triple chunks, seed-stable.
+
+    Triple i is a pure function of (seed, i): subject drawn from the Zipf
+    law by inverse-CDF over a precomputed cumsum (the only O(n_subjects)
+    state), predicate and object uniform.  Id layout matches ``zipf_skew``:
+    [predicates | subjects | objects].  Because nothing depends on chunk
+    boundaries, ``concat(generate_stream(n, c))`` is identical for every c
+    — the streaming-ingest regression in tests/test_ingest_stream.py.
+
+    Duplicates are *not* dropped (no global np.unique — that would need the
+    full array); the store build keeps multiset semantics either way."""
+    if chunk_size < 1:
+        raise ValueError("chunk_size must be >= 1")
+    s_base = n_predicates
+    o_base = s_base + n_subjects
+    ranks = np.arange(1, n_subjects + 1, dtype=np.float64)
+    probs = ranks ** -float(exponent)
+    cdf = np.cumsum(probs / probs.sum())
+    cdf[-1] = 1.0  # guard the tail against rounding
+    for lo in range(0, n_triples, chunk_size):
+        idx = np.arange(lo, min(lo + chunk_size, n_triples), dtype=np.uint64)
+        u = _counter_uniform(seed, 0, idx)
+        s = np.searchsorted(cdf, u, side="right") + s_base
+        p = _counter_hash(seed, 1, idx) % n_predicates
+        o = _counter_hash(seed, 2, idx) % n_objects + o_base
+        yield np.stack([s, p, o], axis=1).astype(np.int64)
+
+
+def generate(
+    n_triples: int,
+    *,
+    n_subjects: int = 512,
+    n_objects: int = 8192,
+    n_predicates: int = 8,
+    exponent: float = 1.4,
+    seed: int = 0,
+) -> np.ndarray:
+    """One-shot twin of :func:`generate_stream` (same triples, one array)."""
+    chunks = list(
+        generate_stream(
+            n_triples, max(n_triples, 1), n_subjects=n_subjects,
+            n_objects=n_objects, n_predicates=n_predicates,
+            exponent=exponent, seed=seed,
+        )
+    )
+    if not chunks:
+        return np.zeros((0, 3), dtype=np.int64)
+    return np.concatenate(chunks, axis=0)
 
 
 def zipf_workload(

@@ -1,0 +1,95 @@
+"""``python -m repro.launch`` — localhost multi-process launcher CLI.
+
+Parent mode (default): spawn N workers on localhost, each running the given
+target after joining a ``jax.distributed`` mesh, then relay their output::
+
+    python -m repro.launch --nprocs 2 --devices-per-proc 4 \
+        -m benchmarks.bench_startup --child --triples 60000
+
+Worker mode (``--worker``, used internally by the parent): initialize
+jax.distributed from the env protocol *before* the target imports jax, then
+run the target as ``__main__`` via runpy.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+_VALUE_FLAGS = {"--nprocs", "--devices-per-proc", "--timeout", "--retries"}
+
+
+def _split_target(argv: list[str]) -> tuple[list[str], list[str]]:
+    """Split launcher flags from the target argv at ``-m`` or the first
+    non-flag token (a script path).  Launcher flags taking a value consume
+    their following token, so ``--nprocs 2 script.py`` splits correctly."""
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "-m" or not a.startswith("-"):
+            return argv[:i], argv[i:]
+        i += 2 if a in _VALUE_FLAGS and "=" not in a else 1
+    return argv, []
+
+
+def _run_worker(target: list[str]) -> int:
+    from repro.launch.multihost import init_from_env
+
+    init_from_env()
+    import runpy
+
+    if target and target[0] == "-m":
+        if len(target) < 2:
+            print("launch: -m requires a module name", file=sys.stderr)
+            return 2
+        mod, args = target[1], target[2:]
+        sys.argv = [mod] + args
+        runpy.run_module(mod, run_name="__main__", alter_sys=True)
+    elif target:
+        script, args = target[0], target[1:]
+        sys.argv = [script] + args
+        runpy.run_path(script, run_name="__main__")
+    else:
+        print("launch: no target given", file=sys.stderr)
+        return 2
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "--worker":
+        return _run_worker(argv[1:])
+
+    own, target = _split_target(argv)
+    parser = argparse.ArgumentParser(prog="repro.launch", description=__doc__)
+    parser.add_argument("--nprocs", type=int, default=2)
+    parser.add_argument("--devices-per-proc", type=int, default=4)
+    parser.add_argument("--timeout", type=float, default=600.0)
+    parser.add_argument("--retries", type=int, default=0,
+                        help="relaunches on transport-infra failures")
+    args = parser.parse_args(own)
+    if not target:
+        parser.error("no target given (script path or -m module)")
+
+    from repro.launch.multihost import launch_localhost
+
+    results = launch_localhost(
+        args.nprocs,
+        target,
+        devices_per_process=args.devices_per_proc,
+        timeout=args.timeout,
+        retries=args.retries,
+    )
+    rc = 0
+    for r in results:
+        for line in r.stdout.splitlines():
+            print(f"[p{r.process_id}] {line}")
+        for line in r.stderr.splitlines():
+            print(f"[p{r.process_id}] {line}", file=sys.stderr)
+        if not r.ok:
+            rc = rc or (r.returncode if r.returncode > 0 else 1)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

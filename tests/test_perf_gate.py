@@ -59,3 +59,64 @@ def test_ms_rows_are_informational():
     fails, _, n = compare(base, _rows(**{"serving/w8d8/p99_ms": 50.0}),
                           0.15, normalize=False)
     assert not fails and n == 0
+
+
+# ------------------------------------------------- startup _s rows (ISSUE 10)
+def test_seconds_row_gates_on_rise():
+    base = _rows(**{"startup/scale/n30k_h2_online_s": 1.0})
+    fails, _, n = compare(
+        base, _rows(**{"startup/scale/n30k_h2_online_s": 1.5}),
+        0.15, normalize=False)
+    assert fails and n == 1, "rising startup time must fail the gate"
+    # within tolerance -> ok
+    fails, _, _ = compare(
+        base, _rows(**{"startup/scale/n30k_h2_online_s": 1.1}),
+        0.15, normalize=False)
+    assert not fails
+
+
+def test_seconds_row_improvement_passes():
+    base = _rows(**{"startup/scale/n30k_h2_online_s": 1.0})
+    fails, _, _ = compare(
+        base, _rows(**{"startup/scale/n30k_h2_online_s": 0.5}),
+        0.15, normalize=False)
+    assert not fails
+
+
+def test_seconds_rows_machine_normalized_together():
+    # every _s row 2x slower == a slower runner: the median time shift
+    # absorbs it and nothing gates...
+    base = _rows(**{"s/a_online_s": 1.0, "s/b_online_s": 2.0,
+                    "s/c_first_answer_s": 3.0})
+    cur = _rows(**{"s/a_online_s": 2.0, "s/b_online_s": 4.0,
+                   "s/c_first_answer_s": 6.0})
+    fails, _, _ = compare(base, cur, 0.15, normalize=True)
+    assert not fails
+    # ...but one cell regressing against the rest still fails
+    cur = _rows(**{"s/a_online_s": 1.0, "s/b_online_s": 2.0,
+                   "s/c_first_answer_s": 9.0})
+    fails, _, _ = compare(base, cur, 0.15, normalize=True)
+    assert any("c_first_answer_s" in f for f in fails)
+
+
+def test_seconds_shift_independent_of_qps_shift():
+    # a faster machine (qps up 2x) must not mask an _s regression: the time
+    # rows calibrate on their own median, here dominated by the regression
+    # pair moving differently from qps
+    base = _rows(**{"a/x_qps": 100.0, "b/y_qps": 100.0, "c/z_qps": 100.0,
+                    "s/online_s": 1.0})
+    cur = _rows(**{"a/x_qps": 200.0, "b/y_qps": 200.0, "c/z_qps": 200.0,
+                   "s/online_s": 1.5})
+    fails, _, _ = compare(base, cur, 0.15, normalize=True)
+    # the lone _s row IS its own median -> fully absorbed (documented blind
+    # spot of single-row calibration); with --no-normalize it gates
+    assert not fails
+    fails, _, _ = compare(base, cur, 0.15, normalize=False)
+    assert any("online_s" in f for f in fails)
+
+
+def test_us_rows_still_ignored():
+    base = _rows(**{"table9/hash_subj_us": 10.0})
+    fails, _, n = compare(base, _rows(**{"table9/hash_subj_us": 500.0}),
+                          0.15, normalize=False)
+    assert not fails and n == 0
